@@ -1,0 +1,63 @@
+"""The paper's application end-to-end (Sec. 4.2): protein database search.
+
+A farm streams ⟨query, subject⟩ pairs through the TPU-adapted Smith-Waterman
+Pallas kernel (BLOSUM50, affine gaps 10-2k), reporting per-query GCUPS and
+the Table-1-style service-time spread.  Second half: the same wavefront DP
+expressed as a *macro data-flow* graph over tiles (paper Sec. 5), showing
+the order-preserving farm doubling as an MDF executor.
+
+Run:  PYTHONPATH=src python examples/smith_waterman_search.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FnNode, MDFExecutor, MDFTask, TaskFarm
+from repro.kernels import ops
+from repro.kernels.ref import sw_ref
+from repro.kernels.ops import build_profile
+
+rng = np.random.default_rng(7)
+
+# --- database search through the farm ---------------------------------------
+queries = {"Q144": 144, "Q497": 497}
+db = [rng.integers(0, 20, int(np.clip(rng.gamma(2.0, 176), 2, 1200))).astype(np.int32)
+      for _ in range(24)]
+db_cells = sum(len(s) for s in db)
+
+for name, qlen in queries.items():
+    query = jnp.asarray(rng.integers(0, 20, qlen), jnp.int32)
+    times = []
+
+    def align(subj):
+        t0 = time.perf_counter()
+        s = float(ops.smith_waterman(query, jnp.asarray(subj),
+                                     gap_open=10.0, gap_extend=2.0))
+        times.append(time.perf_counter() - t0)
+        return s
+
+    farm = TaskFarm(2, preserve_order=True)
+    farm.add_stream(db)
+    farm.add_worker(FnNode(align))
+    t0 = time.perf_counter()
+    scores = farm.run_and_wait()
+    wall = time.perf_counter() - t0
+    gcups = qlen * db_cells / wall / 1e9
+    print(f"{name}: best={max(scores):.0f}  GCUPS={gcups:.6f}  "
+          f"task min/avg/max = {min(times)*1e3:.1f}/{np.mean(times)*1e3:.1f}/"
+          f"{max(times)*1e3:.1f} ms")
+
+# --- wavefront dynamic programming as macro data-flow (paper Sec. 5) --------
+# Block-decompose a DP-like accumulation; dependencies (i-1,j), (i,j-1).
+N = 4
+def tile_fn(*deps, i=0, j=0):
+    return sum(deps) + i + j
+
+tasks = [MDFTask(tag=(i, j),
+                 fn=lambda *d, i=i, j=j: tile_fn(*d, i=i, j=j),
+                 deps=tuple(t for t in [(i-1, j), (i, j-1)] if min(t) >= 0))
+         for i in range(N) for j in range(N)]
+out = MDFExecutor(nworkers=3).run(tasks)
+print(f"MDF wavefront over {N}x{N} tiles: corner value = {out[(N-1, N-1)]}")
+print("smith_waterman_search OK")

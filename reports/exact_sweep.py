@@ -1,0 +1,35 @@
+"""Two-point exact-cost sweep: unrolled compiles at two reduced depths per
+cell; roofline.py extrapolates cost = a + b*L to the full depth."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_DRYRUN_WIRE", "f16")
+import json, sys
+sys.path.insert(0, "src")
+from repro.configs import ARCHS, SHAPES, cell_applicable
+from repro.launch.dryrun import run_cell
+
+def depths(cfg):
+    if cfg.family == "hybrid":
+        return [cfg.attn_every, 2 * cfg.attn_every]
+    if cfg.family == "vlm":
+        return [cfg.cross_attn_every, 2 * cfg.cross_attn_every]
+    return [2, 4]
+
+out = open("reports/exact.jsonl", "a")
+only = sys.argv[1:] or sorted(ARCHS)
+for arch in only:
+    cfg = ARCHS[arch]
+    for shape in SHAPES:
+        if not cell_applicable(arch, shape.name)[0] if False else not cell_applicable(arch, shape)[1] == "" and False:
+            pass
+        ok, _ = cell_applicable(arch, shape)
+        if not ok:
+            continue
+        for L in depths(cfg):
+            print(f"=== exact {arch} × {shape.name} × L={L} ===", flush=True)
+            rec = run_cell(arch, shape.name, False, unroll=True, n_layers=L)
+            print("   ->", rec["status"], rec.get("compile_s"), flush=True)
+            rec.pop("trace", None)
+            out.write(json.dumps(rec) + "\n")
+            out.flush()
+print("exact sweep done")

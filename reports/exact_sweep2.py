@@ -1,0 +1,58 @@
+"""Re-run exact two-point sweep with the fixed collective parser.
+Priority: hillclimb cells -> decode cells -> train -> prefill."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_DRYRUN_WIRE", "f16")
+import json, sys
+sys.path.insert(0, "src")
+from repro.configs import ARCHS, SHAPES, cell_applicable
+from repro.launch.dryrun import run_cell
+
+def depths(cfg):
+    if cfg.family == "hybrid":
+        return [cfg.attn_every, 2 * cfg.attn_every]
+    if cfg.family == "vlm":
+        return [cfg.cross_attn_every, 2 * cfg.cross_attn_every]
+    return [2, 4]
+
+cells = []
+for arch in sorted(ARCHS):
+    for shape in SHAPES:
+        if cell_applicable(arch, shape)[0]:
+            cells.append((arch, shape.name, shape.kind))
+
+PRIO = {("kimi-k2-1t-a32b","train_4k"): 0, ("deepseek-coder-33b","decode_32k"): 0,
+        ("mamba2-130m","train_4k"): 0}
+KIND = {"decode": 1, "train": 2, "prefill": 3}
+cells.sort(key=lambda c: (PRIO.get((c[0], c[1]), KIND[c[2]])))
+
+out = open("reports/exact.jsonl", "a")
+for arch, shape, kind in cells:
+    for L in depths(ARCHS[arch]):
+        print(f"=== exact2 {arch} × {shape} × L={L} ===", flush=True)
+        rec = run_cell(arch, shape, False, unroll=True, n_layers=L)
+        print("   ->", rec["status"], rec.get("compile_s"), flush=True)
+        rec.pop("trace", None)
+        out.write(json.dumps(rec) + "\n"); out.flush()
+print("exact2 done", flush=True)
+
+# chain the hillclimb variants
+RUNS = [
+    ("kimi-k2-1t-a32b", "train_4k", {"REPRO_MOE_BACKEND": "a2a"}, [2, 4]),
+    ("deepseek-coder-33b", "decode_32k", {}, [2, 4]),   # serve-replication (new code)
+    ("mamba2-130m", "train_4k", {"REPRO_SSM_BF16": "1"}, [2, 4]),
+    ("mamba2-130m", "train_4k", {"REPRO_SSM_BF16": "1", "REPRO_SSM_CHUNK": "128"}, [2, 4]),
+]
+pout = open("reports/perf.jsonl", "a")
+for arch, shape, env, ds in RUNS:
+    for k, v in env.items():
+        os.environ[k] = v
+    for L in ds:
+        print(f"=== perf {arch} × {shape} × L={L} env={env} ===", flush=True)
+        rec = run_cell(arch, shape, False, unroll=True, n_layers=L)
+        print("   ->", rec["status"], rec.get("compile_s"), rec.get("error", ""), flush=True)
+        rec.pop("trace", None)
+        pout.write(json.dumps(rec) + "\n"); pout.flush()
+    for k in env:
+        del os.environ[k]
+print("perf variants done", flush=True)

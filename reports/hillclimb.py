@@ -1,0 +1,29 @@
+"""§Perf hillclimb measurement runs (exact two-point, single-pod mesh)."""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_DRYRUN_WIRE", "f16")
+import json
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+
+RUNS = [
+    # H1: kimi MoE dispatch — symmetric a2a vs FastFlow local_gather(baseline in exact.jsonl)
+    ("kimi-k2-1t-a32b", "train_4k", {"REPRO_MOE_BACKEND": "a2a"}, [2, 4]),
+    # H2: dsc decode — serve-param-replication (new code default; baseline pre-patch in exact.jsonl)
+    ("deepseek-coder-33b", "decode_32k", {}, [2, 4]),
+    # H3: mamba2 train — bf16 SSD matmuls
+    ("mamba2-130m", "train_4k", {"REPRO_SSM_BF16": "1"}, [2, 4]),
+]
+out = open("reports/perf.jsonl", "a")
+for arch, shape, env, depths in RUNS:
+    for k, v in env.items():
+        os.environ[k] = v
+    for L in depths:
+        print(f"=== perf {arch} × {shape} × L={L} env={env} ===", flush=True)
+        rec = run_cell(arch, shape, False, unroll=True, n_layers=L)
+        print("   ->", rec["status"], rec.get("compile_s"), rec.get("error", ""), flush=True)
+        rec.pop("trace", None)
+        out.write(json.dumps(rec) + "\n"); out.flush()
+    for k in env:
+        del os.environ[k]
+print("hillclimb measurements done")

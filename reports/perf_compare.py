@@ -1,0 +1,99 @@
+"""Fill EXPERIMENTS.md §Perf tables: baseline (exact.jsonl latest records)
+vs variants (perf.jsonl), two-point extrapolated to full depth."""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import ARCHS  # noqa: E402
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def load(path, want_variant=None, want_env=None):
+    pts = {}
+    try:
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") != "OK" or not r.get("unrolled"):
+                    continue
+                v = r.get("variant") or {}
+                if want_variant is not None and v != want_variant:
+                    continue
+                if want_env is not None and (r.get("env") or {}) != want_env:
+                    continue
+                pts.setdefault((r["arch"], r["shape"]), {})[r["n_layers"]] = r
+    except FileNotFoundError:
+        pass
+    return pts
+
+
+def extrap(pts, arch, shape, f):
+    d = pts.get((arch, shape))
+    if not d or len(d) < 2:
+        return None
+    (l1, r1), (l2, r2) = sorted(d.items())[:2]
+    L = ARCHS[arch].n_layers
+    return f(r1) + (f(r2) - f(r1)) / (l2 - l1) * (L - l1)
+
+
+def terms(pts, arch, shape):
+    fl = extrap(pts, arch, shape, lambda r: r["flops_per_device"])
+    if fl is None:
+        return None
+    by = extrap(pts, arch, shape, lambda r: r["bytes_accessed_per_device"])
+    coll = {op: extrap(pts, arch, shape, lambda r: r["collectives"][op]["bytes"])
+            for op in ["all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"]}
+    cb = sum(v for v in coll.values() if v)
+    return {"compute_s": fl / PEAK, "memory_s": by / HBM,
+            "collective_s": cb / LINK, "coll_bytes_gb": cb / 1e9,
+            "coll": {k: (v or 0) / 1e9 for k, v in coll.items()},
+            "flops": fl, "bytes": by}
+
+
+def show(tag, t):
+    if t is None:
+        print(f"{tag}: (pending)")
+        return
+    dom = max(("compute", t["compute_s"]), ("memory", t["memory_s"]),
+              ("collective", t["collective_s"]), key=lambda kv: kv[1])
+    print(f"{tag}: compute={t['compute_s']:.3f}s memory={t['memory_s']:.3f}s "
+          f"collective={t['collective_s']:.3f}s (dom={dom[0]}) "
+          f"coll_bytes={t['coll_bytes_gb']:.1f}GB "
+          f"[AG={t['coll']['all-gather']:.1f} AR={t['coll']['all-reduce']:.1f} "
+          f"RS={t['coll']['reduce-scatter']:.1f} A2A={t['coll']['all-to-all']:.1f} "
+          f"CP={t['coll']['collective-permute']:.1f}]")
+
+
+if __name__ == "__main__":
+    base = load("reports/exact.jsonl", want_variant={})
+    base_any = load("reports/exact.jsonl")   # includes pre-variant records
+    perf = load("reports/perf.jsonl")
+
+    print("== H1: kimi-k2 train_4k ==")
+    show("baseline local_gather", terms(base, "kimi-k2-1t-a32b", "train_4k")
+         or terms(base_any, "kimi-k2-1t-a32b", "train_4k"))
+    show("variant a2a          ",
+         terms(load("reports/perf.jsonl", {"moe_backend": "a2a"}),
+               "kimi-k2-1t-a32b", "train_4k"))
+
+    print("\n== H2: deepseek-coder-33b decode_32k ==")
+    show("baseline fsdp-params ",
+         terms(load("reports/perf.jsonl", {}, {"REPRO_SERVE_FSDP": "1"}),
+               "deepseek-coder-33b", "decode_32k"))
+    show("serve-replicated     ",
+         terms(load("reports/perf.jsonl", {}, {}), "deepseek-coder-33b", "decode_32k"))
+    show("+ grouped-GQA attn   ",
+         terms(load("reports/perf.jsonl", {}, {"GROUPED_GQA": "1"}),
+               "deepseek-coder-33b", "decode_32k"))
+
+    print("\n== H3: mamba2-130m train_4k ==")
+    show("baseline fp32 SSD    ", terms(base, "mamba2-130m", "train_4k"))
+    show("bf16 SSD matmuls     ",
+         terms(load("reports/perf.jsonl", {"ssm_compute_dtype": "bfloat16"}),
+               "mamba2-130m", "train_4k"))
+    show("bf16 + chunk 128     ",
+         terms(load("reports/perf.jsonl",
+                    {"ssm_compute_dtype": "bfloat16", "ssm_chunk": 128}),
+               "mamba2-130m", "train_4k"))

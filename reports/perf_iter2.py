@@ -1,0 +1,14 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_DRYRUN_WIRE", "f16")
+import json, sys
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+out = open("reports/perf.jsonl", "a")
+for L in [2, 4]:
+    print(f"=== perf2 dsc decode grouped-gqa L={L} ===", flush=True)
+    rec = run_cell("deepseek-coder-33b", "decode_32k", False, unroll=True, n_layers=L)
+    rec["env"] = {"GROUPED_GQA": "1"}
+    print("   ->", rec["status"], rec.get("compile_s"), flush=True)
+    out.write(json.dumps(rec) + "\n"); out.flush()
+print("done")

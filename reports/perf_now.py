@@ -1,0 +1,29 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_DRYRUN_WIRE", "f16")
+import json, sys
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+
+RUNS = [
+    ("deepseek-coder-33b", "decode_32k", {"REPRO_SERVE_FSDP": "1"}, [2, 4]),  # H2 baseline
+    ("deepseek-coder-33b", "decode_32k", {}, [2, 4]),                         # H2 optimized
+    ("mamba2-130m", "train_4k", {"REPRO_SSM_BF16": "1"}, [2, 4]),             # H3 iter1
+    ("mamba2-130m", "train_4k", {"REPRO_SSM_BF16": "1", "REPRO_SSM_CHUNK": "128"}, [2, 4]),
+    ("kimi-k2-1t-a32b", "train_4k", {"REPRO_MOE_BACKEND": "a2a"}, [2, 4]),    # H1 variant
+]
+out = open("reports/perf.jsonl", "a")
+for arch, shape, env, ds in RUNS:
+    for k, v in env.items():
+        os.environ[k] = v
+    for L in ds:
+        print(f"=== perf {arch} × {shape} × L={L} env={env} ===", flush=True)
+        rec = run_cell(arch, shape, False, unroll=True, n_layers=L)
+        # record the env-level knobs too (serve_fsdp isn't a cfg field)
+        rec["env"] = dict(env)
+        print("   ->", rec["status"], rec.get("compile_s"), rec.get("error","")[:200], flush=True)
+        rec.pop("trace", None)
+        out.write(json.dumps(rec) + "\n"); out.flush()
+    for k in env:
+        del os.environ[k]
+print("perf_now done", flush=True)

@@ -1,0 +1,21 @@
+# The paper's primary contribution: FastFlow's lock-free streaming layer,
+# host flavour (threads + Lamport SPSC rings) and device flavour (mesh axes
+# + collective-permute SPSC channels).
+from .spsc import EOS, SPSCQueue
+from .lockq import LockQueue
+from .farm import FarmStats, FnNode, TaskFarm, ff_node
+from .allocator import PagePool, PoolExhausted
+from .mdf import MDFExecutor, MDFTask
+from .dchannel import RingChannel, chain_send, double_buffered_ring, ring_send
+from .dfarm import combine, dispatch, farm_map
+from .dpipeline import pipeline_apply, pipeline_utilisation
+
+__all__ = [
+    "EOS", "SPSCQueue", "LockQueue",
+    "FarmStats", "FnNode", "TaskFarm", "ff_node",
+    "PagePool", "PoolExhausted",
+    "MDFExecutor", "MDFTask",
+    "RingChannel", "chain_send", "double_buffered_ring", "ring_send",
+    "combine", "dispatch", "farm_map",
+    "pipeline_apply", "pipeline_utilisation",
+]

@@ -1,0 +1,161 @@
+"""Device farm skeleton — Emitter/Workers/Collector over a mesh axis.
+
+The farm's three entities map onto SPMD pieces:
+
+  * the **Emitter** is the dispatch step: every device computes, for each of
+    its resident items, the destination worker and a slot inside that
+    worker's inbound buffer (round-robin is just the identity sharding; the
+    general data-dependent case is bucket-by-destination);
+  * the **Workers** are the devices along ``axis_name``, each processing the
+    buffer it received;
+  * the **Collector** is the combine step, which routes results back to the
+    device that emitted the item and restores item order (the tagged-token /
+    order-preserving farm of paper Fig. 1: (dest, pos) *is* the tag).
+
+``dispatch``/``combine`` are the generic mechanism; MoE expert-parallel
+routing (`models/moe.py`) is its headline client — a token-to-expert farm.
+The communication backend is pluggable:
+
+  * ``"a2a"``   — one ``lax.all_to_all`` (the symmetric, "fence-like"
+                  baseline: a single mesh-wide exchange);
+  * ``"ring"``  — the FastFlow-style schedule: the exchange is decomposed
+                  into ``n-1`` SPSC ring hops (collective-permute) so each
+                  hop's transfer can overlap the per-hop worker compute.
+                  Same payload bytes, no global exchange on the data path.
+
+Shape-polymorphism note: everything is static-shaped (capacity-bounded
+buffers with overflow dropping, as in capacity-factor MoE routing), so it
+lowers cleanly under ``shard_map`` + ``jit``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .dchannel import ring_send
+
+__all__ = ["dispatch", "combine", "farm_map", "DispatchInfo"]
+
+
+class DispatchInfo(Tuple):
+    """(dest, pos, valid) routing tag triple."""
+
+
+def _bucket_positions(dest: jnp.ndarray, n_buckets: int, capacity: int):
+    """Slot index of each item within its destination bucket (+validity)."""
+    onehot = jax.nn.one_hot(dest, n_buckets, dtype=jnp.int32)       # (L, n)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                        # rank in bucket
+    pos = jnp.sum(pos * onehot, axis=1)                              # (L,)
+    valid = pos < capacity
+    return pos, valid
+
+
+def dispatch(
+    items: jnp.ndarray,          # (L, d) local items
+    dest: jnp.ndarray,           # (L,) destination worker in [0, axis_size)
+    axis_name: str,
+    capacity: int,
+    *,
+    backend: str = "a2a",
+    wire_dtype=None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]:
+    """Route items to workers along ``axis_name``.
+
+    Returns ``(recv, (dest, pos, valid))`` where ``recv`` has shape
+    ``(axis_size, capacity, d)``: ``recv[s]`` are the items sent by source
+    device ``s`` to *this* worker.  ``wire_dtype`` optionally quantises the
+    payload on the wire (e.g. bf16 dispatch for fp32 compute) — a
+    collective-bytes optimisation logged in EXPERIMENTS §Perf.
+    """
+    n = lax.axis_size(axis_name)
+    L, d = items.shape
+    pos, valid = _bucket_positions(dest, n, capacity)
+    send = jnp.zeros((n, capacity, d), items.dtype)
+    send = send.at[dest, pos].set(
+        jnp.where(valid[:, None], items, 0), mode="drop"
+    )
+    if wire_dtype is not None and wire_dtype != items.dtype:
+        send = send.astype(wire_dtype)
+    if backend == "a2a":
+        recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=False)
+        # all_to_all with split/concat 0 keeps (n, capacity, d): row i now
+        # holds the bucket sent by device i.
+    elif backend == "ring":
+        recv = _ring_exchange(send, axis_name)
+    else:
+        raise ValueError(f"unknown dispatch backend {backend!r}")
+    if wire_dtype is not None and wire_dtype != items.dtype:
+        recv = recv.astype(items.dtype)
+    return recv, (dest, pos, valid)
+
+
+def _ring_exchange(send: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """All-to-all decomposed into n-1 SPSC ring hops.
+
+    At hop h, the block in flight left its producer h hops ago; this device
+    (index i) extracts the bucket addressed to it — ``send`` row ``i`` of the
+    block originating at device ``i - h`` — and forwards the rest.  XLA's
+    async collective-permute lets hop h+1's transfer overlap hop h's
+    extraction/compute; in the MoE client the per-hop expert matmul sits in
+    that shadow.
+    """
+    n = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+
+    def hop(block, h):
+        src = (me - h) % n
+        mine = lax.dynamic_index_in_dim(block, me, axis=0, keepdims=False)
+        nxt = ring_send(block, axis_name)
+        return nxt, (src, mine)
+
+    block0 = send
+    _, (srcs, buckets) = lax.scan(hop, block0, jnp.arange(n))
+    # buckets[h] came from device (me - h); scatter into source-indexed rows
+    recv = jnp.zeros_like(send)
+    recv = recv.at[srcs].set(buckets)
+    return recv
+
+
+def combine(
+    processed: jnp.ndarray,      # (axis_size, capacity, d) worker outputs
+    info: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    axis_name: str,
+    *,
+    backend: str = "a2a",
+    wire_dtype=None,
+) -> jnp.ndarray:
+    """Inverse of :func:`dispatch`: results return to their emitters in
+    item order (the order-preserving collector). Invalid (dropped) items
+    combine to zeros."""
+    dest, pos, valid = info
+    out_dtype = processed.dtype
+    if wire_dtype is not None and wire_dtype != processed.dtype:
+        processed = processed.astype(wire_dtype)
+    if backend == "a2a":
+        back = lax.all_to_all(processed, axis_name, split_axis=0, concat_axis=0, tiled=False)
+    elif backend == "ring":
+        back = _ring_exchange(processed, axis_name)
+    else:
+        raise ValueError(f"unknown combine backend {backend!r}")
+    back = back.astype(out_dtype)
+    gathered = back[dest, pos]                       # (L, d)
+    return jnp.where(valid[:, None], gathered, 0)
+
+
+def farm_map(
+    worker_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    items: jnp.ndarray,
+    dest: jnp.ndarray,
+    axis_name: str,
+    capacity: int,
+    *,
+    backend: str = "a2a",
+) -> jnp.ndarray:
+    """Full farm round-trip: dispatch → worker → collect, order-preserving."""
+    recv, info = dispatch(items, dest, axis_name, capacity, backend=backend)
+    flat = recv.reshape(-1, recv.shape[-1])
+    out = worker_fn(flat).reshape(recv.shape[0], capacity, -1)
+    return combine(out, info, axis_name, backend=backend)

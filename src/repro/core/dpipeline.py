@@ -1,0 +1,101 @@
+"""Pipeline skeleton on a mesh axis — streaming microbatches over SPSC edges.
+
+FastFlow's pipeline is a chain of nodes connected by SPSC queues.  Mapped to
+the mesh: each *stage* is a device group along the ``stage`` axis; each edge
+is a ``chain_send`` (non-wrapping collective-permute).  Microbatches stream
+through the chain; at tick t, stage s processes microbatch (t - s) — the
+GPipe/1F1B family expressed as a static streaming-network schedule rather
+than an imperative scheduler.
+
+The implementation is SPMD: every stage runs the same ``lax.scan``; stage
+identity comes from ``lax.axis_index``.  The pipeline is differentiable
+(gradients flow back through the ppermute edges, which transpose to the
+reverse-chain sends), so the same skeleton serves training and inference.
+
+Bubble accounting (recorded in EXPERIMENTS.md): with S stages and M
+microbatches, utilisation = M / (M + S - 1).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .dchannel import chain_send
+
+__all__ = ["pipeline_apply", "pipeline_utilisation"]
+
+
+def _needs_pvary(x, axis_name: str) -> bool:
+    """True if ``x`` does not yet vary over ``axis_name`` (shard_map vma)."""
+    try:
+        return axis_name not in jax.typeof(x).vma
+    except Exception:  # pragma: no cover - older jax without vma
+        return False
+
+
+def pipeline_utilisation(n_stages: int, n_micro: int) -> float:
+    return n_micro / (n_micro + n_stages - 1)
+
+
+def pipeline_apply(
+    stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    stage_params: Any,
+    microbatches: jnp.ndarray,
+    *,
+    axis_name: str = "stage",
+    collect: str = "psum",
+) -> jnp.ndarray:
+    """Stream ``microbatches`` through the stage chain.
+
+    Must be called inside ``shard_map`` with ``axis_name`` in scope and with
+    ``stage_params`` already sharded so each device group holds its own
+    stage's parameters.
+
+    Args:
+      stage_fn: ``y = stage_fn(params_local, x)`` — one stage's compute.
+      stage_params: this stage's parameter shard.
+      microbatches: ``(M, mb, ...)`` array, replicated view; stage 0 reads
+        microbatch t at tick t, later stages ignore it and consume their
+        inbound SPSC slot instead.
+
+    Returns:
+      ``(M, mb, ...)`` outputs as produced by the *last* stage.  With
+      ``collect="psum"`` (default) they are summed over the stage axis
+      (inactive stages contribute zeros) so the result is replicated and can
+      leave the shard_map with an unsharded spec; ``collect="local"`` returns
+      the raw per-stage emit.
+    """
+    n_stages = lax.axis_size(axis_name)
+    stage = lax.axis_index(axis_name)
+    m = microbatches.shape[0]
+    ticks = m + n_stages - 1
+    mb_shape = microbatches.shape[1:]
+
+    def tick(carry, t):
+        inbound = carry  # slot arriving over the SPSC edge from stage-1
+        # stage 0's "queue" is the input stream itself
+        idx = jnp.clip(t, 0, m - 1)
+        first_in = lax.dynamic_index_in_dim(microbatches, idx, keepdims=False)
+        first_in = lax.pvary(first_in, (axis_name,)) if _needs_pvary(first_in, axis_name) else first_in
+        x = jnp.where(stage == 0, first_in, inbound)
+        active = (t >= stage) & (t - stage < m)
+        y = stage_fn(stage_params, x)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # push onto the outbound SPSC edge (last stage's send is dropped)
+        out_slot = chain_send(y, axis_name)
+        # last stage emits: place the finished microbatch in the output slot
+        emit = jnp.where((stage == n_stages - 1) & active, y, jnp.zeros_like(y))
+        return out_slot, emit
+
+    init = jnp.zeros(mb_shape, microbatches.dtype)
+    if _needs_pvary(init, axis_name):
+        init = lax.pvary(init, (axis_name,))
+    _, emitted = lax.scan(tick, init, jnp.arange(ticks))
+    # emitted[t] holds microbatch (t - (S-1)); realign to microbatch order
+    out = lax.dynamic_slice_in_dim(emitted, n_stages - 1, m, axis=0)
+    if collect == "psum":
+        out = lax.psum(out, axis_name)
+    return out

@@ -1,0 +1,105 @@
+"""Macro data-flow executor over the farm (paper Sec. 5).
+
+The paper closes by proposing FastFlow as "a fast macro data-flow executor
+(actually wrapping around the order preserving farm) ... including dynamic
+programming".  This module is that executor: a DAG of named tasks is
+streamed through a farm; the Collector feeds completion events back to the
+Emitter over an SPSC ring — i.e. the network is *cyclic*, exercising the
+paper's claim that arbitrated SPSC composition supports arbitrary streaming
+graphs, loops included.
+
+    Emitter (releases ready tasks) ──> Workers ──> Collector
+        ^                                              │
+        └────────────── feedback SPSC ─────────────────┘
+
+`examples/mdf_wavefront.py` uses it to run blocked Smith-Waterman as a
+wavefront dynamic program — the exact workload class the paper names.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+from .farm import TaskFarm, ff_node
+from .spsc import SPSCQueue
+
+__all__ = ["MDFTask", "MDFExecutor"]
+
+
+@dataclass
+class MDFTask:
+    tag: Any
+    fn: Callable[..., Any]
+    deps: Tuple[Any, ...] = ()
+    extra_args: Tuple[Any, ...] = ()
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+
+
+class MDFExecutor:
+    """Execute a static task DAG with tagged-token matching."""
+
+    def __init__(self, nworkers: int = 4, capacity: int = 1024):
+        self.nworkers = nworkers
+        self.capacity = capacity
+        self.results: Dict[Any, Any] = {}
+
+    def run(self, tasks: Sequence[MDFTask]) -> Dict[Any, Any]:
+        by_tag = {t.tag: t for t in tasks}
+        assert len(by_tag) == len(tasks), "duplicate tags"
+        indeg = {t.tag: len(t.deps) for t in tasks}
+        succs: Dict[Any, List[Any]] = {t.tag: [] for t in tasks}
+        for t in tasks:
+            for d in t.deps:
+                assert d in by_tag, f"unknown dep {d!r} of {t.tag!r}"
+                succs[d].append(t.tag)
+
+        results = self.results
+        feedback = SPSCQueue(self.capacity)  # collector -> emitter (the cycle)
+        total = len(tasks)
+
+        class _Emitter(ff_node):
+            def __init__(self) -> None:
+                self.ready = [tag for tag, d in indeg.items() if d == 0]
+                self.released = 0
+                self.completed = 0
+
+            def svc(self, _):
+                while True:
+                    # 1. fold in completion events from the feedback ring
+                    while True:
+                        ev = feedback.pop()
+                        if ev is SPSCQueue._EMPTY:
+                            break
+                        self.completed += 1
+                        for s in succs[ev]:
+                            indeg[s] -= 1
+                            if indeg[s] == 0:
+                                self.ready.append(s)
+                    # 2. release a ready task, or terminate, or spin
+                    if self.ready:
+                        self.released += 1
+                        return by_tag[self.ready.pop()]
+                    if self.completed >= total:
+                        return None  # EOS
+                    time.sleep(0.000_05)
+
+        class _Worker(ff_node):
+            def svc(self, task: MDFTask):
+                args = tuple(results[d] for d in task.deps) + tuple(task.extra_args)
+                return (task.tag, task.fn(*args, **task.kwargs))
+
+        class _Collector(ff_node):
+            def svc(self, item):
+                tag, value = item
+                results[tag] = value          # store BEFORE signalling readiness
+                feedback.push_wait(tag)
+                return None
+
+        farm = TaskFarm(self.nworkers, preserve_order=False)
+        farm.add_emitter(_Emitter())
+        farm.add_worker(_Worker())
+        farm.add_collector(_Collector())
+        farm.run_and_wait()
+        assert len(results) == total, f"deadlock or lost tokens: {len(results)}/{total}"
+        return results

@@ -1,0 +1,3 @@
+from .pipeline import StreamingPipeline, SyntheticLM, make_batch_stream
+
+__all__ = ["StreamingPipeline", "SyntheticLM", "make_batch_stream"]

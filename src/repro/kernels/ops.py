@@ -1,0 +1,101 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True everywhere in this repo because the container
+is CPU-only; on a real TPU runtime set ``REPRO_PALLAS_COMPILE=1`` (or pass
+``interpret=False``) to lower the kernels natively.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .smith_waterman import sw_pallas as _sw
+from .ssd_scan import ssd_scan as _ssd
+
+__all__ = ["smith_waterman", "flash_attention_op", "ssd_scan_op",
+           "build_profile", "BLOSUM50", "AA_ALPHABET", "encode_seq"]
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+# ---------------------------------------------------------------------------
+# Smith-Waterman front-end: alphabet, BLOSUM50, profiles
+# ---------------------------------------------------------------------------
+AA_ALPHABET = "ARNDCQEGHILKMFPSTWYVBZX*"        # 24 codes, BLOSUM order
+
+# BLOSUM50 (upper triangle source: NCBI), 24x24
+_B50 = """
+ 5 -2 -1 -2 -1 -1 -1  0 -2 -1 -2 -1 -1 -3 -1  1  0 -3 -2  0 -2 -1 -1 -5
+-2  7 -1 -2 -4  1  0 -3  0 -4 -3  3 -2 -3 -3 -1 -1 -3 -1 -3 -1  0 -1 -5
+-1 -1  7  2 -2  0  0  0  1 -3 -4  0 -2 -4 -2  1  0 -4 -2 -3  4  0 -1 -5
+-2 -2  2  8 -4  0  2 -1 -1 -4 -4 -1 -4 -5 -1  0 -1 -5 -3 -4  5  1 -1 -5
+-1 -4 -2 -4 13 -3 -3 -3 -3 -2 -2 -3 -2 -2 -4 -1 -1 -5 -3 -1 -3 -3 -2 -5
+-1  1  0  0 -3  7  2 -2  1 -3 -2  2  0 -4 -1  0 -1 -1 -1 -3  0  4 -1 -5
+-1  0  0  2 -3  2  6 -3  0 -4 -3  1 -2 -3 -1 -1 -1 -3 -2 -3  1  5 -1 -5
+ 0 -3  0 -1 -3 -2 -3  8 -2 -4 -4 -2 -3 -4 -2  0 -2 -3 -3 -4 -1 -2 -2 -5
+-2  0  1 -1 -3  1  0 -2 10 -4 -3  0 -1 -1 -2 -1 -2 -3  2 -4  0  0 -1 -5
+-1 -4 -3 -4 -2 -3 -4 -4 -4  5  2 -3  2  0 -3 -3 -1 -3 -1  4 -4 -3 -1 -5
+-2 -3 -4 -4 -2 -2 -3 -4 -3  2  5 -3  3  1 -4 -3 -1 -2 -1  1 -4 -3 -1 -5
+-1  3  0 -1 -3  2  1 -2  0 -3 -3  6 -2 -4 -1  0 -1 -3 -2 -3  0  1 -1 -5
+-1 -2 -2 -4 -2  0 -2 -3 -1  2  3 -2  7  0 -3 -2 -1 -1  0  1 -3 -1 -1 -5
+-3 -3 -4 -5 -2 -4 -3 -4 -1  0  1 -4  0  8 -4 -3 -2  1  4 -1 -4 -4 -2 -5
+-1 -3 -2 -1 -4 -1 -1 -2 -2 -3 -4 -1 -3 -4 10 -1 -1 -4 -3 -3 -2 -1 -2 -5
+ 1 -1  1  0 -1  0 -1  0 -1 -3 -3  0 -2 -3 -1  5  2 -4 -2 -2  0  0 -1 -5
+ 0 -1  0 -1 -1 -1 -1 -2 -2 -1 -1 -1 -1 -2 -1  2  5 -3 -2  0  0 -1  0 -5
+-3 -3 -4 -5 -5 -1 -3 -3 -3 -3 -2 -3 -1  1 -4 -4 -3 15  2 -3 -5 -2 -3 -5
+-2 -1 -2 -3 -3 -1 -2 -3  2 -1 -1 -2  0  4 -3 -2 -2  2  8 -1 -3 -2 -1 -5
+ 0 -3 -3 -4 -1 -3 -3 -4 -4  4  1 -3  1 -1 -3 -2  0 -3 -1  5 -4 -3 -1 -5
+-2 -1  4  5 -3  0  1 -1  0 -4 -4  0 -3 -4 -2  0  0 -5 -3 -4  5  2 -1 -5
+-1  0  0  1 -3  4  5 -2  0 -3 -3  1 -1 -4 -1  0 -1 -2 -2 -3  2  5 -1 -5
+-1 -1 -1 -1 -2 -1 -1 -2 -1 -1 -1 -1 -1 -2 -2 -1  0 -3 -1 -1 -1 -1 -1 -5
+-5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5 -5  1
+"""
+BLOSUM50 = jnp.asarray(
+    [[int(v) for v in row.split()] for row in _B50.strip().splitlines()],
+    jnp.float32)
+
+
+def encode_seq(seq: str) -> jnp.ndarray:
+    lut = {c: i for i, c in enumerate(AA_ALPHABET)}
+    return jnp.asarray([lut.get(c, lut["X"]) for c in seq.upper()], jnp.int32)
+
+
+def build_profile(query: jnp.ndarray, matrix: jnp.ndarray = BLOSUM50,
+                  pad_to: int = 128) -> Tuple[jnp.ndarray, int]:
+    """Farrar's query profile, TPU layout: (A, Qp) with Qp multiple of 128.
+    Padded query positions score a large negative so they never align."""
+    q_len = int(query.shape[0])
+    qp = -(-q_len // pad_to) * pad_to
+    prof = matrix[:, query]                                 # (A, Q)
+    prof = jnp.pad(prof, ((0, 0), (0, qp - q_len)), constant_values=-1e4)
+    return prof, q_len
+
+
+def smith_waterman(query: jnp.ndarray, subject: jnp.ndarray, *,
+                   gap_open: float = 10.0, gap_extend: float = 2.0,
+                   matrix: jnp.ndarray = BLOSUM50, tile: int = 512,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Best local alignment score of two encoded sequences (the paper's
+    application, Sec. 4.2).  Handles padding internally."""
+    interpret = _INTERPRET if interpret is None else interpret
+    prof, q_len = build_profile(query, matrix)
+    dlen = int(subject.shape[0])
+    dp = -(-dlen // tile) * tile
+    subj = jnp.pad(subject, (0, dp - dlen), constant_values=matrix.shape[0])
+    return _sw(prof, subj, gap_open=gap_open, gap_extend=gap_extend,
+               q_len=q_len, tile=tile, interpret=interpret)
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=None,
+                       interpret: Optional[bool] = None, **kw):
+    interpret = _INTERPRET if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=interpret, **kw)
+
+
+def ssd_scan_op(x, dt, A, B, C, *, chunk=256, interpret: Optional[bool] = None):
+    interpret = _INTERPRET if interpret is None else interpret
+    return _ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret)

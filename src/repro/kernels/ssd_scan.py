@@ -1,0 +1,102 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+Grid (B, n_chunks) with the chunk dimension minor-most (sequential); the
+inter-chunk state (H, P, N) is VMEM scratch carried across grid steps —
+the streaming-pipeline structure again: each chunk is one SPSC hop, and the
+heavy intra-chunk math is dense matmuls for the MXU:
+
+  y_diag = (L ⊙ (C·Bᵀ)) · (dt·X)      — (l,l)×(l,HP) per head-group
+  y_off  = C · h_prev (decayed)        — (l,N)×(N,HP)
+  h_new  = decay·h_prev + Bᵀ·(decay·dt·X)
+
+All recurrence state stays in fp32; inputs may be bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _segsum(dA):
+    """(l, h) → (h, l, l) lower-triangular decay (log-space)."""
+    l = dA.shape[0]
+    cs = jnp.cumsum(dA, axis=0)                                 # (l,h)
+    seg = cs.T[:, :, None] - cs.T[:, None, :]                   # (h,l,l)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    return jnp.where(mask[None], seg, -jnp.inf)
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr,
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (l, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (l, H)
+    A = a_ref[...].astype(jnp.float32)        # (H,)
+    B = b_ref[0].astype(jnp.float32)          # (l, N)
+    C = c_ref[0].astype(jnp.float32)          # (l, N)
+    h_prev = h_scr[...]                       # (H, P, N)
+
+    dA = dt * A                               # (l, H)
+    dA_cum = jnp.cumsum(dA, axis=0)           # (l, H)
+    L = jnp.exp(_segsum(dA))                  # (H, l, l)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))  # (l, l)
+    gated = scores[None] * L                  # (H, l, l)
+    xdt = x * dt[..., None]                   # (l, H, P)
+    y_diag = jnp.einsum("hls,shp->lhp", gated, xdt)
+    state_decay = jnp.exp(dA_cum)             # (l, H)
+    y_off = jnp.einsum("ln,hpn,lh->lhp", C, h_prev, state_decay)
+    decay_to_end = jnp.exp(dA_cum[-1:] - dA_cum)                  # (l, H)
+    states = jnp.einsum("ln,lh,lhp->hpn", B, decay_to_end * dt, x)
+    h_new = h_prev * jnp.exp(dA_cum[-1])[:, None, None] + states
+    h_scr[...] = h_new
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _emit():
+        hout_ref[0] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = True):
+    """x (b,T,H,P); dt (b,T,H); A (H,); B/C (b,T,N).
+    Returns (y (b,T,H,P) fp32, h_final (b,H,P,N) fp32)."""
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+    l = min(chunk, T)
+    assert T % l == 0
+    nc = T // l
+    kernel = functools.partial(_ssd_kernel, chunk=l)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, l, H, P), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, l, H), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((H,), lambda bi, ci: (0,)),
+            pl.BlockSpec((1, l, N), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, l, N), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l, H, P), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda bi, ci: (bi, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, T, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, h

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import: jax locks the device count on first init.
+os.environ.setdefault("REPRO_DRYRUN_WIRE", "f16")  # bf16-width collectives on CPU
+# (No `from __future__` here for the same reason — keep the two lines first.)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent end-to-end:
+the sharded step function partitions over the production mesh, compiles,
+and reports memory_analysis() (fits / doesn't) and cost_analysis() (FLOPs,
+bytes) plus the collective schedule parsed from the optimized HLO — the
+inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both --out reports/dryrun
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, SHAPES, cell_applicable
+from ..parallel.context import mesh_context
+from .mesh import DP_AXES, make_production_mesh
+from .steps import input_specs, step_fn_for
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the optimized HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    dtype_bytes = {"f64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2,
+                   "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                   "s64": 8, "u64": 8, "c64": 8}
+    # Strip /*index=N*/ comments (their '=' breaks definition matching for
+    # tuple-shaped collectives), then match DEFINITIONS only:
+    # "%x = f32[...]{...} all-gather(..." / "%x = (bf16[..], ...) all-to-all(...".
+    # The opcode must be followed by "(" — otherwise operand *references*
+    # (e.g. "fusion(%all-reduce.1)") would count once per consumer.
+    hlo_text = re.sub(r"/\*.*?\*/", "", hlo_text)
+    pat = re.compile(r"=\s*(\(?[^=\n]*?)\s(" + "|".join(COLLECTIVES) +
+                     r")(?:-start)?(?:\.\d+)?\(")
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for m in pat.finditer(hlo_text):
+        blob, op = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in shape_pat.findall(blob):   # sums all tuple elements
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dtype_bytes.get(dt, 4)
+        out[op]["count"] += 1
+        out[op]["bytes"] += total
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, compile_: bool = True,
+             unroll: bool = False, n_layers: int = 0) -> dict:
+    cfg = ARCHS[arch]
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    ok, why = cell_applicable(arch, shape)
+    os.environ["REPRO_UNROLL"] = "1" if unroll else "0"
+    if n_layers:
+        cfg = cfg.replace(n_layers=n_layers)
+    if unroll:
+        # bigger tiles: same FLOPs, far fewer unrolled chunk bodies to compile
+        cfg = cfg.replace(attn_q_chunk=4096, attn_kv_chunk=4096,
+                          loss_chunk=0 if shape.kind != "train" else 4096)
+    # §Perf hillclimb variant knobs (recorded in the output record)
+    variant = {}
+    if os.environ.get("REPRO_MOE_BACKEND"):
+        variant["moe_backend"] = os.environ["REPRO_MOE_BACKEND"]
+    if os.environ.get("REPRO_SSM_BF16") == "1":
+        variant["ssm_compute_dtype"] = "bfloat16"
+    if os.environ.get("REPRO_LOSS_CHUNK"):
+        variant["loss_chunk"] = int(os.environ["REPRO_LOSS_CHUNK"])
+    if os.environ.get("REPRO_MOE_WIRE"):
+        variant["moe_wire_dtype"] = os.environ["REPRO_MOE_WIRE"]
+    if os.environ.get("REPRO_SSM_CHUNK"):
+        variant["ssm_chunk"] = int(os.environ["REPRO_SSM_CHUNK"])
+    if os.environ.get("REPRO_CAUSAL_SKIP") == "1":
+        variant["causal_skip"] = True
+    if variant:
+        cfg = cfg.replace(**variant)
+    rec = {"arch": arch, "shape": shape_name, "unrolled": unroll,
+           "n_layers": cfg.n_layers, "variant": variant,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh_context(mesh, dp_axes=DP_AXES(multi_pod)) as ctx:
+            fn, argnames = step_fn_for(cfg, shape, ctx)
+            specs = input_specs(cfg, shape, ctx)
+            args = [specs[a] for a in argnames]
+            donate = tuple(i for i, a in enumerate(argnames)
+                           if a in ("opt_state", "cache"))
+            jitted = jax.jit(fn, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            if not compile_:
+                rec["status"] = "LOWERED"
+                return rec
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            rec.update(
+                status="OK",
+                flops_per_device=cost.get("flops", 0.0),
+                bytes_accessed_per_device=cost.get("bytes accessed", 0.0),
+                argument_size=getattr(mem, "argument_size_in_bytes", 0),
+                output_size=getattr(mem, "output_size_in_bytes", 0),
+                temp_size=getattr(mem, "temp_size_in_bytes", 0),
+                alias_size=getattr(mem, "alias_size_in_bytes", 0),
+                generated_code_size=getattr(mem, "generated_code_size_in_bytes", 0),
+                collectives=parse_collectives(hlo),
+                n_devices=mesh.devices.size,
+            )
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost_analysis: flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_accessed_per_device']:.3e}")
+    except Exception as e:
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll scans: exact FLOP/byte/collective "
+                         "accounting (XLA counts while bodies once)")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override n_layers (two-point exact-cost extrapolation)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    failures = 0
+    out_f = open(args.out, "a") if args.out else None
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                print(f"=== {a} × {s} × mesh={'2x16x16' if mp else '16x16'} ===",
+                      flush=True)
+                rec = run_cell(a, s, mp, compile_=not args.no_compile,
+                               unroll=args.unroll, n_layers=args.layers)
+                print(f"  -> {rec['status']}"
+                      + (f" ({rec.get('reason','')})" if rec["status"] == "SKIP" else "")
+                      + (f" lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s"
+                         if rec["status"] == "OK" else ""), flush=True)
+                if rec["status"] == "FAIL":
+                    failures += 1
+                    print(rec["error"])
+                    print(rec.get("trace", "")[-1500:])
+                if out_f:
+                    rec.pop("trace", None)
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+                cells.append(rec)
+    print(f"\n{sum(c['status']=='OK' for c in cells)} OK / "
+          f"{sum(c['status']=='SKIP' for c in cells)} SKIP / {failures} FAIL "
+          f"of {len(cells)} cells")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

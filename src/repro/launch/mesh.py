@@ -1,0 +1,34 @@
+"""Production mesh factories.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked at first jax init — the dry-run sets
+XLA_FLAGS before importing anything else).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_test_mesh", "DP_AXES", "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def DP_AXES(multi_pod: bool = False):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for multi-device tests (requires forced host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,9 @@
+from .config import ModelConfig, active_param_count, param_count
+from .model import (batch_pspecs, cache_pspecs, decode_step, init_cache,
+                    init_params, loss_fn, params_pspecs, prefill)
+
+__all__ = [
+    "ModelConfig", "param_count", "active_param_count",
+    "init_params", "params_pspecs", "loss_fn", "prefill", "decode_step",
+    "init_cache", "cache_pspecs", "batch_pspecs",
+]

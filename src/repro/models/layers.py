@@ -1,0 +1,64 @@
+"""Shared building blocks: RMSNorm, RoPE, SwiGLU, embeddings, init."""
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = [
+    "rms_norm", "rope_freqs", "apply_rope", "swiglu", "dense_init",
+    "embed_init", "Params", "scan_unroll",
+]
+
+
+def scan_unroll() -> bool:
+    """True when the dry-run requests fully-unrolled scans: XLA's
+    cost_analysis counts a while-loop body ONCE, so exact FLOP/byte roofline
+    terms need straight-line HLO (REPRO_UNROLL=1; see launch/dryrun.py)."""
+    return os.environ.get("REPRO_UNROLL", "0") == "1"
+
+Params = Dict[str, jnp.ndarray]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate pairs. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                                   # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv       # (..., seq, dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]                           # (..., seq, 1, dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+def dense_init(key, shape, in_axis_size: int, dtype) -> jnp.ndarray:
+    """Scaled-normal init (1/sqrt(fan_in))."""
+    std = in_axis_size ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,228 @@
+"""Mixture-of-Experts layer — the farm skeleton at device level.
+
+Token→expert routing *is* the paper's farm: the router is the Emitter, the
+expert shards are the Workers, and the weighted recombination is the
+order-preserving Collector (the (expert, slot) pair is the tag).  Three
+interchangeable dispatch backends expose the paper's design space:
+
+  * ``local_gather`` (default) — FastFlow-style **no-symmetric-exchange**
+    dispatch.  Activations between blocks are replicated over the ``model``
+    axis (Megatron layout), so every model-device already *has* every local
+    token; each worker simply gathers the copies addressed to its own
+    experts into a capacity-bounded buffer, computes, scatters back, and the
+    single ``psum`` that TP needs anyway combines the results.  Collective
+    cost: one psum of (tokens × d) — *independent of top-k*.  This is the
+    "consume from your SPSC endpoint instead of a global exchange" insight.
+  * ``a2a`` — the classic symmetric exchange (GShard/Switch): tokens are
+    split over model-devices, routed with ``lax.all_to_all`` via
+    ``repro.core.dfarm``, processed, exchanged back, then all-gathered.
+    Collective cost scales with top-k (2 × tokens × k × cf × d / N exchanged
+    + gather).  This is the baseline the §Perf comparison beats for k ≥ 2.
+  * ``ring`` — the a2a decomposed into n-1 SPSC ring hops
+    (``dfarm.dispatch(backend="ring")``): same bytes as a2a but point-to-
+    point, so each hop's transfer overlaps per-hop expert compute.
+  * ``dense`` — every expert on every token, one-hot combine; the test
+    oracle.
+
+Expert sharding adapts to the mesh: with E % N == 0 experts are sharded over
+``model`` (E/N experts per device, full d_ff); otherwise d_ff is sharded
+(all experts per device, d_ff/N each).  Both arrive inside shard_map as a
+local (E_loc, d, f_loc) tensor and share one code path.  Capacity-factor
+routing with per-expert static capacity keeps all shapes static.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import dfarm
+from ..parallel.context import psum_compat
+from .config import ModelConfig
+
+__all__ = ["moe_apply", "moe_init", "router_aux_loss", "expert_shard_kind"]
+
+
+def expert_shard_kind(n_experts: int, model_axis_size: int) -> str:
+    """'ep' (experts over model) or 'tp' (d_ff over model)."""
+    return "ep" if n_experts % model_axis_size == 0 else "tp"
+
+
+def moe_init(key, cfg: ModelConfig):
+    from .layers import dense_init
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(ks[0], (d, E), d, jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), d, cfg.param_dtype),
+        "w_up": dense_init(ks[2], (E, d, f), d, cfg.param_dtype),
+        "w_down": dense_init(ks[3], (E, f, d), f, cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        ks2 = jax.random.split(ks[4], 3)
+        params["shared"] = {
+            "w_gate": dense_init(ks2[0], (d, fs), d, cfg.param_dtype),
+            "w_up": dense_init(ks2[1], (d, fs), d, cfg.param_dtype),
+            "w_down": dense_init(ks2[2], (fs, d), fs, cfg.param_dtype),
+        }
+    return params
+
+
+def _route(tokens: jnp.ndarray, router_w: jnp.ndarray, top_k: int):
+    """Returns (gate_weights (Tk,k), expert_ids (Tk,k), probs (Tk,E))."""
+    logits = tokens.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_logits, ids = lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(top_logits, axis=-1)          # renormalise over k
+    return gates, ids, probs
+
+
+def router_aux_loss(probs: jnp.ndarray, ids: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balancing loss: E * Σ_e f_e · p̄_e."""
+    hot = jax.nn.one_hot(ids[..., 0], n_experts, dtype=jnp.float32)
+    f_e = hot.mean(axis=0)
+    p_e = probs.mean(axis=0)
+    return n_experts * jnp.sum(f_e * p_e)
+
+
+def _expert_ffn(buf: jnp.ndarray, wg, wu, wd) -> jnp.ndarray:
+    """(E_loc, C, d) → (E_loc, C, d) batched SwiGLU (exact grouped-FLOPs)."""
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
+
+
+def _shared_ffn(x, shared) -> jnp.ndarray:
+    g = x @ shared["w_gate"]
+    u = x @ shared["w_up"]
+    return (jax.nn.silu(g) * u) @ shared["w_down"]
+
+
+def _dispatch_local(tokens, eid_flat, gate_flat, e_loc, capacity):
+    """Gather copies owned by this worker into (E_loc, C, d); return combine fn."""
+    tk, k = eid_flat.shape[0] // tokens.shape[0], None  # unused; clarity only
+    onehot = jax.nn.one_hot(eid_flat, e_loc, dtype=jnp.int32)       # OOB rows → 0
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos * onehot, axis=1)                              # rank in expert
+    valid = (eid_flat >= 0) & (eid_flat < e_loc) & (pos < capacity)
+    src = jnp.repeat(jnp.arange(tokens.shape[0]), eid_flat.shape[0] // tokens.shape[0])
+    buf = jnp.zeros((e_loc, capacity, tokens.shape[1]), tokens.dtype)
+    eid_safe = jnp.where(valid, eid_flat, e_loc)                     # drop row
+    buf = buf.at[eid_safe, pos].set(
+        jnp.where(valid[:, None], tokens[src], 0), mode="drop")
+
+    def combine(out_buf):
+        got = out_buf[jnp.clip(eid_flat, 0, e_loc - 1), jnp.clip(pos, 0, capacity - 1)]
+        got = jnp.where(valid[:, None], got, 0)
+        return got.astype(jnp.float32) * gate_flat[:, None]
+
+    return buf, combine
+
+
+def moe_apply(x: jnp.ndarray, params, cfg: ModelConfig, *,
+              axis_name: Optional[str] = "model",
+              backend: Optional[str] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the MoE block.  x: (B, S, d) replicated over the model axis.
+
+    Returns (out, aux_loss).  Must be wrapped by the model's partial-manual
+    shard_map when a mesh is in use (`axis_name` in scope); with
+    ``axis_name=None`` runs single-device semantics (the oracle path).
+    """
+    backend = backend or cfg.moe_backend
+    B, S, d = x.shape
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    tokens = x.reshape(-1, d)
+    tk = tokens.shape[0]
+
+    gates, ids, probs = _route(tokens, params["router"], k)
+    aux = router_aux_loss(probs, ids, E)
+
+    if backend == "dense" or axis_name is None:
+        out = _moe_dense(tokens, params, gates, ids, cfg)
+    else:
+        n = lax.axis_size(axis_name)
+        e_loc = params["w_gate"].shape[0]        # local shard (post shard_map)
+        n_groups = E // e_loc
+        me = lax.axis_index(axis_name)
+        group = (me * n_groups) // n
+        eid_flat = ids.reshape(-1) - group * e_loc      # local expert id or OOB
+        gate_flat = gates.reshape(-1)
+        capacity = max(1, int(tk * k * cf / E + 0.999))
+
+        if backend == "local_gather":
+            buf, combine = _dispatch_local(tokens, eid_flat, gate_flat, e_loc, capacity)
+            out_buf = _expert_ffn(buf, params["w_gate"], params["w_up"], params["w_down"])
+            contrib = combine(out_buf)                               # (tk*k, d) fp32
+            out = contrib.reshape(tk, k, d).sum(axis=1)
+        elif backend in ("a2a", "ring"):
+            assert n_groups == n, "a2a/ring dispatch needs E % model_axis == 0"
+            # each device routes only its 1/n slice of the (replicated) tokens
+            slc = tk // n
+            my_tok = lax.dynamic_slice_in_dim(tokens, me * slc, slc, axis=0)
+            my_ids = lax.dynamic_slice_in_dim(ids, me * slc, slc, axis=0)
+            my_gates = lax.dynamic_slice_in_dim(gates, me * slc, slc, axis=0)
+            items = jnp.repeat(my_tok, k, axis=0)                    # (slc*k, d)
+            flat_ids = my_ids.reshape(-1)
+            dest = (flat_ids // e_loc).astype(jnp.int32)
+            # ship the (local expert id + 1) with the payload so the worker
+            # can regroup without re-routing; slot 0 ⇒ empty buffer entry.
+            tagged = jnp.concatenate(
+                [items, (flat_ids % e_loc + 1).astype(items.dtype)[:, None]], axis=1)
+            cap_dev = max(1, int(slc * k * cf / n + 0.999))
+            recv, info = dfarm.dispatch(tagged, dest, axis_name, cap_dev,
+                                        backend=backend,
+                                        wire_dtype=_wire(cfg))
+            recv_flat = recv.reshape(-1, d + 1)
+            recv_tok, recv_tag = recv_flat[:, :d], recv_flat[:, d]
+            eid1 = jnp.round(recv_tag).astype(jnp.int32) - 1         # -1 ⇒ empty
+            cap2 = recv_flat.shape[0]
+            # per-LOCAL-expert capacity (cap2 already includes cf headroom)
+            cap_e = max(1, -(-cap2 // e_loc) * 2)
+            buf, combine = _dispatch_local(
+                recv_tok, eid1, jnp.ones((cap2,), jnp.float32), e_loc, cap_e)
+            out_buf = _expert_ffn(buf, params["w_gate"], params["w_up"], params["w_down"])
+            back_flat = combine(out_buf).astype(x.dtype)             # (cap2, d)
+            processed = jnp.concatenate(
+                [back_flat, recv_tag[:, None].astype(x.dtype)], axis=1)
+            processed = processed.reshape(recv.shape[0], -1, d + 1)
+            got = dfarm.combine(processed, info, axis_name, backend=backend,
+                                wire_dtype=_wire(cfg))[:, :d]        # (slc*k, d)
+            my_out = (got.astype(jnp.float32).reshape(slc, k, d)
+                      * my_gates[..., None]).sum(axis=1)
+            out = jnp.zeros((tk, d), jnp.float32)
+            out = lax.dynamic_update_slice_in_dim(out, my_out, me * slc, axis=0)
+            # psum below combines the per-device shards (and doubles as the
+            # TP reduce for the shared expert)
+        else:
+            raise ValueError(f"unknown moe backend {backend!r}")
+
+        if "shared" in params:
+            out = out + _shared_ffn(tokens, params["shared"]).astype(jnp.float32)
+        # one psum combines disjoint expert contributions (ep layout) or
+        # partial f-slices (tp layout) — and doubles as the block's TP reduce.
+        # Reduce in model dtype: halves collective bytes vs fp32.
+        out = psum_compat(out.astype(x.dtype), axis_name)
+        return out.reshape(B, S, d), aux
+
+    if "shared" in params:
+        out = out + _shared_ffn(tokens, params["shared"]).astype(jnp.float32)
+    return out.astype(x.dtype).reshape(B, S, d), aux
+
+
+def _wire(cfg: ModelConfig):
+    return jnp.dtype(cfg.moe_wire_dtype) if cfg.moe_wire_dtype else None
+
+
+def _moe_dense(tokens, params, gates, ids, cfg: ModelConfig) -> jnp.ndarray:
+    """Oracle: run every expert on every token, combine by routing weights."""
+    E = cfg.n_experts
+    g = jnp.einsum("td,edf->tef", tokens, params["w_gate"])
+    u = jnp.einsum("td,edf->tef", tokens, params["w_up"])
+    h = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, params["w_down"])
+    # scatter top-k gates into a (Tk, E) combine matrix
+    weight = jnp.zeros((tokens.shape[0], E), jnp.float32)
+    weight = weight.at[jnp.arange(tokens.shape[0])[:, None], ids].add(gates)
+    return jnp.einsum("ted,te->td", h.astype(jnp.float32), weight)

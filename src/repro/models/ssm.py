@@ -1,0 +1,198 @@
+"""Mamba2 / SSD (state-space duality) mixer — chunked, matmul-rich form.
+
+The SSD recurrence  h_t = a_t·h_{t-1} + dt_t·(B_t ⊗ x_t),  y_t = C_t·h_t + D·x_t
+is evaluated chunk-by-chunk: inside a chunk everything is dense matmuls
+(MXU-friendly — this is the TPU adaptation of the paper's "keep the stream
+flowing through compute-dense stages"), and chunks are connected by a
+sequential ``lax.scan`` carrying the (B, H, P, N) state — a streaming
+pipeline over time, one SPSC hop per chunk.
+
+Shapes: u (B, T, d_model); internally x (B, T, H, P) with H·P = d_inner,
+B/C (B, T, N) single-group, dt (B, T, H), A (H,) negative reals.
+
+The pure-jnp implementation here is the oracle for the Pallas kernel in
+``repro/kernels/ssd_scan.py`` and is what the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import dense_init, rms_norm, scan_unroll
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode", "ssd_chunked", "ssd_reference", "init_ssm_cache"]
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+def ssd_reference(x, dt, A, B, C, h0=None):
+    """Naive sequential recurrence (test oracle). x (b,t,h,p), dt (b,t,h),
+    A (h,), B,C (b,t,n). Returns y (b,t,h,p), h_final (b,h,p,n)."""
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    h_state = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0
+
+    def step(h_state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        a = jnp.exp(dt_t * A)                                   # (b,h)
+        upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], B_t)
+        h_state = h_state * a[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_state, C_t)
+        return h_state, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    h_state, ys = lax.scan(step, h_state, xs)
+    return ys.transpose(1, 0, 2, 3), h_state
+
+
+def _segsum(dA):
+    """(b,l,h) → (b,h,l,l) lower-triangular cumulative log-decay."""
+    l = dA.shape[1]
+    x = dA.transpose(0, 2, 1)                                   # (b,h,l)
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]                   # sum_{j<k<=i}
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None, compute_dtype=jnp.float32):
+    """Chunked SSD. Same contract as ssd_reference.  ``compute_dtype``
+    applies to the intra-chunk matmuls only (decays/state stay fp32) —
+    halving the memory-roofline term for the memory-bound SSM archs."""
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    l = min(chunk, t)
+    assert t % l == 0, f"seq {t} not divisible by chunk {l}"
+    nc = t // l
+    f32 = jnp.float32
+    xr = x.reshape(b, nc, l, h, p).astype(f32)
+    dtr = dt.reshape(b, nc, l, h).astype(f32)
+    Br = B.reshape(b, nc, l, n).astype(f32)
+    Cr = C.reshape(b, nc, l, n).astype(f32)
+    h_init = jnp.zeros((b, h, p, n), f32) if h0 is None else h0.astype(f32)
+
+    def per_chunk(h_prev, inp):
+        xc, dtc, Bc, Cc = inp                                   # (b,l,h,p) ...
+        dA = dtc * A                                            # (b,l,h)
+        dA_cum = jnp.cumsum(dA, axis=1)                         # (b,l,h)
+        # intra-chunk (dual / attention-like form)
+        L = jnp.exp(_segsum(dA))                                # (b,h,l,l)
+        scores = jnp.einsum("bln,bsn->bls", Cc.astype(compute_dtype),
+                            Bc.astype(compute_dtype))           # (b,l,l)
+        gated = (scores.astype(f32)[:, None] * L).astype(compute_dtype)
+        xdt = (xc * dtc[..., None]).astype(compute_dtype)       # (b,l,h,p)
+        y_diag = jnp.einsum("bhls,bshp->blhp", gated, xdt,
+                            preferred_element_type=f32)
+        # contribution of the inbound state (the SPSC slot from chunk c-1)
+        state_decay = jnp.exp(dA_cum)                           # (b,l,h)
+        y_off = jnp.einsum("bln,bhpn,blh->blhp", Cc, h_prev, state_decay)
+        # new state = decayed old + within-chunk accumulation
+        decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)      # (b,l,h)
+        states = jnp.einsum("bln,blh,blhp->bhpn", Bc, decay_to_end * dtc, xc)
+        h_new = h_prev * jnp.exp(dA_cum[:, -1])[..., None, None] + states
+        return h_new, y_diag + y_off
+
+    hs, ys = lax.scan(
+        per_chunk, h_init,
+        (xr.transpose(1, 0, 2, 3, 4), dtr.transpose(1, 0, 2, 3),
+         Br.transpose(1, 0, 2, 3), Cr.transpose(1, 0, 2, 3)),
+        unroll=scan_unroll())
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    return y, hs
+
+
+# --------------------------------------------------------------------------
+# full Mamba2 block
+# --------------------------------------------------------------------------
+def ssm_init(key, cfg: ModelConfig) -> Dict:
+    d, di, n, hh, kk = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(ks[4], (hh,), jnp.float32,
+                                    jnp.log(0.001), jnp.log(0.1)))
+    return {
+        "w_z": dense_init(ks[0], (d, di), d, cfg.param_dtype),
+        "w_xbc": dense_init(ks[1], (d, di + 2 * n), d, cfg.param_dtype),
+        "w_dt": dense_init(ks[2], (d, hh), d, cfg.param_dtype),
+        "dt_bias": jnp.log(jnp.expm1(dt)),                     # softplus inverse
+        "A_log": jnp.log(jnp.arange(1, hh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((hh,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[3], (kk, di + 2 * n), jnp.float32)
+                   * (kk ** -0.5)).astype(cfg.param_dtype),
+        "norm": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[5], (di, d), di, cfg.param_dtype),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, conv_w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time. xbc (B,T,Ch); conv_w (K,Ch).
+    Returns (out (B,T,Ch), new_state (B,K-1,Ch))."""
+    k = conv_w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    padded = jnp.concatenate([state, xbc], axis=1)              # (B, T+K-1, Ch)
+    out = sum(padded[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    new_state = padded[:, -(k - 1):] if k > 1 else state
+    return out, new_state
+
+
+def _block_inputs(params, u, cfg: ModelConfig, conv_state=None):
+    di, n, hh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = u @ params["w_z"]                                       # (B,T,di)
+    xbc = u @ params["w_xbc"]                                   # (B,T,di+2n)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus((u @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])                   # (B,T,H)
+    A = -jnp.exp(params["A_log"])                               # (H,)
+    xh = x.reshape(*x.shape[:-1], hh, cfg.ssm_headdim)
+    return z, xh, dt, A, B, C, new_conv
+
+
+def ssm_apply(params, u, cfg: ModelConfig, *, h0=None, conv_state=None,
+              return_cache: bool = False):
+    """Full-sequence Mamba2 block. u (B,T,d) → (B,T,d) [+cache]."""
+    z, xh, dt, A, B, C, new_conv = _block_inputs(params, u, cfg, conv_state)
+    y, h_final = ssd_chunked(xh, dt, A, B, C, cfg.ssm_chunk, h0=h0,
+                             compute_dtype=jnp.dtype(cfg.ssm_compute_dtype))
+    y = y + xh.astype(jnp.float32) * params["D"][:, None]
+    y = y.reshape(*u.shape[:-1], cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    if return_cache:
+        return out, {"h": h_final, "conv": new_conv}
+    return out
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                          dtype),
+    }
+
+
+def ssm_decode(params, u, cache: Dict, cfg: ModelConfig):
+    """Single-token step. u (B,1,d) → ((B,1,d), new_cache).  O(1) in context
+    length — this is why the SSM archs run the 500k-decode cell."""
+    z, xh, dt, A, B, C, new_conv = _block_inputs(params, u, cfg, cache["conv"])
+    x_t = xh[:, 0].astype(jnp.float32)                          # (B,H,P)
+    dt_t = dt[:, 0]                                             # (B,H)
+    a = jnp.exp(dt_t * A)                                       # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], B[:, 0].astype(jnp.float32))
+    h = cache["h"] * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, C[:, 0].astype(jnp.float32))
+    y = y + x_t * params["D"][:, None]
+    y = y.reshape(u.shape[0], 1, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["w_out"], {"h": h, "conv": new_conv}

@@ -1,0 +1,10 @@
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .schedule import cosine_schedule
+from .compression import ef_int8_psum, int8_quantize, int8_dequantize
+from .accumulate import accumulate_grads
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "cosine_schedule", "ef_int8_psum", "int8_quantize", "int8_dequantize",
+    "accumulate_grads",
+]

@@ -1,0 +1,37 @@
+"""Gradient accumulation with a single deferred reduction.
+
+Microbatches stream through ``lax.scan`` (the input pipeline shape:
+emitter → worker, one SPSC slot per microbatch); gradients accumulate in
+fp32 locally and the cross-replica reduction happens ONCE at the end —
+overlap-friendly and 1/n_micro the collective bytes of per-microbatch
+reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["accumulate_grads"]
+
+
+def accumulate_grads(loss_grad_fn: Callable, params: Any,
+                     micro_batches: Any) -> Tuple[jnp.ndarray, Any, Any]:
+    """loss_grad_fn(params, batch) -> ((loss, metrics), grads).
+
+    micro_batches: pytree with a leading n_micro axis on every leaf.
+    Returns (mean_loss, metrics_of_last, mean_grads fp32).
+    """
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        (loss, metrics), grads = loss_grad_fn(params, mb)
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+        return (loss_acc + loss, g_acc), metrics
+
+    n = jax.tree.leaves(micro_batches)[0].shape[0]
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, g_sum), metrics = lax.scan(body, (jnp.float32(0), g0), micro_batches)
+    inv = 1.0 / n
+    return loss_sum * inv, metrics, jax.tree.map(lambda g: g * inv, g_sum)

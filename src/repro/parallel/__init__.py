@@ -1,0 +1,6 @@
+from .context import MeshCtx, current_ctx, mesh_context, shard, manual_model
+from .ring_attention import ring_attention
+from . import rules
+
+__all__ = ["MeshCtx", "current_ctx", "mesh_context", "shard", "manual_model",
+           "ring_attention", "rules"]

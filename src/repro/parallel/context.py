@@ -1,0 +1,167 @@
+"""Mesh context: how model code learns about the distribution environment.
+
+The model is written once; the distribution strategy is ambient.  A
+``mesh_context`` names the data-parallel axes (possibly several — e.g.
+``("pod", "data")`` on the multi-pod mesh) and the tensor/expert-parallel
+axis.  Model code calls :func:`shard` for GSPMD constraints and
+:func:`manual_model` for the few regions that need hand-placed collectives
+(embedding lookup, vocab-parallel CE, MoE dispatch).  With no context
+active, everything degrades to plain single-device semantics — which is
+what smoke tests exercise.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshCtx", "mesh_context", "current_ctx", "shard", "manual_model",
+           "is_spec_leaf"]
+
+
+def is_spec_leaf(v) -> bool:
+    """Leaf predicate for sharding-token trees: None or a PLAIN tuple of
+    tokens (NamedTuples — e.g. optimizer states — are containers, not specs)."""
+    return v is None or (type(v) is tuple)
+
+
+def psum_compat(x, axis_name: str):
+    """bf16 psum that survives the XLA-CPU partial-manual bug.
+
+    XLA's CPU backend check-fails ("Invalid binary instruction opcode copy")
+    on a bf16 all-reduce emitted from a partially-manual shard_map; f32 and
+    f16 are fine, and TPU is unaffected.  Workaround policy:
+      * default (correctness paths/tests): upcast to f32 around the psum;
+      * REPRO_DRYRUN_WIRE=f16 (set by launch/dryrun.py): reduce in f16 so
+        the HLO's collective byte-widths match what bf16 would be on TPU —
+        keeps the roofline collective term honest.
+    """
+    import os
+    import jax.numpy as jnp
+    if x.dtype == jnp.bfloat16 and jax.default_backend() == "cpu":
+        wire = jnp.float16 if os.environ.get("REPRO_DRYRUN_WIRE") == "f16" else jnp.float32
+        return jax.lax.psum(x.astype(wire), axis_name).astype(x.dtype)
+    return jax.lax.psum(x, axis_name)
+
+_TLS = threading.local()
+
+# spec tokens: "dp" → all data axes, "mp" → model axis, None → replicated
+DP, MP = "dp", "mp"
+
+
+@dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]
+    model_axis: str
+
+    @property
+    def dp_size(self) -> int:
+        s = 1
+        for a in self.dp_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def mp_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def resolve(self, *tokens) -> P:
+        """Translate ("dp", None, "mp") tokens into a PartitionSpec."""
+        out = []
+        for t in tokens:
+            if t == DP:
+                out.append(self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0])
+            elif t == MP:
+                out.append(self.model_axis)
+            elif t is None:
+                out.append(None)
+            else:
+                out.append(t)
+        return P(*out)
+
+    def sharding(self, *tokens) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(*tokens))
+
+
+@contextmanager
+def mesh_context(mesh: Mesh, dp_axes: Sequence[str] = ("data",),
+                 model_axis: str = "model"):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = MeshCtx(mesh, tuple(dp_axes), model_axis)
+    try:
+        with mesh:
+            yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def current_ctx() -> Optional[MeshCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+def shard(x: Any, *tokens) -> Any:
+    """GSPMD sharding constraint (no-op without a mesh context)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(*tokens))
+
+
+def manual_model(fn: Callable, in_specs, out_specs) -> Callable:
+    """FULL-manual shard_map region (all mesh axes manual).
+
+    Specs are written with the tokens of :func:`shard` and must account for
+    the data axes explicitly (dp-sharded params are gathered inside with
+    :func:`fsdp_gather`, making ZeRO-3's collectives visible in the HLO).
+    Full-manual is deliberate: partially-manual shard_map + grad + scan
+    check-fails XLA's CPU backend ("Invalid binary instruction opcode
+    copy"), full-manual does not — see tests/test_sharding_rules.py.
+    Without a context, returns ``fn`` unchanged (axis size 1 semantics must
+    hold — keep ``lax.psum(..., axis)`` out of that path)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return fn
+
+    def tok2spec(ts):
+        if ts is None:
+            return P()
+        return ctx.resolve(*ts) if isinstance(ts, tuple) else ts
+
+    # NOTE: multi-arg/multi-output specs are passed as LISTS (a plain tuple
+    # would itself parse as one spec leaf); converted to tuples after mapping.
+    ispecs = jax.tree.map(tok2spec, in_specs, is_leaf=is_spec_leaf)
+    ospecs = jax.tree.map(tok2spec, out_specs, is_leaf=is_spec_leaf)
+    if isinstance(ispecs, list):
+        ispecs = tuple(ispecs)
+    if isinstance(ospecs, list):
+        ospecs = tuple(ospecs)
+    return jax.shard_map(fn, mesh=ctx.mesh, in_specs=ispecs, out_specs=ospecs,
+                         check_vma=False)
+
+
+def fsdp_gather(tree: Any, spec_tree: Any) -> Any:
+    """Inside a full-manual region: all-gather every 'dp'-sharded dim of the
+    params (the explicit ZeRO-3 gather; its transpose is the grad
+    reduce-scatter).  No-op without a context."""
+    ctx = current_ctx()
+    if ctx is None:
+        return tree
+
+    def leaf(x, toks):
+        if toks is None:
+            return x
+        for dim, t in enumerate(toks):
+            if t == "dp":
+                for ax in reversed(ctx.dp_axes):
+                    x = jax.lax.all_gather(x, ax, axis=dim, tiled=True)
+        return x
+
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    spec_flat = treedef.flatten_up_to(spec_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(x, s) for x, s in zip(flat, spec_flat)])

@@ -1,0 +1,65 @@
+"""Ring attention — sequence parallelism as a cyclic SPSC network.
+
+The paper's claim is that arbitrary streaming networks, cycles included,
+compose from SPSC channels.  Ring attention is the flagship device-level
+cycle: the sequence is sharded over a mesh axis, each device keeps its Q
+shard resident, and the K/V shards circulate hop-by-hop on an SPSC ring
+(``collective-permute``), with flash-style online-softmax accumulation per
+hop.  Communication is perfectly balanced point-to-point and each hop's
+transfer overlaps the previous hop's attention compute (double buffering) —
+no all-gather of the sequence ever happens.
+
+Use: inside shard_map, q/k/v sharded on the sequence axis over
+``axis_name``; returns the local output shard.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.dchannel import ring_send
+from ..models.attention import _chunk_body
+
+__all__ = ["ring_attention"]
+
+
+def ring_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   axis_name: str, causal: bool = True,
+                   window: Optional[int] = None) -> jnp.ndarray:
+    """q (B, S_loc, H, Dh); k/v (B, S_loc, Hkv, Dh), sequence-sharded."""
+    B, s_loc, H, Dh = q.shape
+    n = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    groups = H // k.shape[2]
+    scale = Dh ** -0.5
+    qpos = me * s_loc + jnp.arange(s_loc)
+
+    m0 = jnp.full((B, H, s_loc), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, s_loc), jnp.float32)
+    a0 = jnp.zeros((B, H, s_loc, Dh), jnp.float32)
+    # the accumulators become axis-varying once a hop folds in a kv block
+    try:
+        m0, l0, a0 = (lax.pvary(t, (axis_name,)) for t in (m0, l0, a0))
+    except Exception:  # pragma: no cover - older jax without vma typing
+        pass
+
+    def hop(state, h_idx):
+        (m, l, acc), (k_blk, v_blk) = state
+        # issue the next hop's send first: overlaps with this hop's compute
+        k_next = ring_send(k_blk, axis_name)
+        v_next = ring_send(v_blk, axis_name)
+        src = (me - h_idx) % n
+        kpos = src * s_loc + jnp.arange(s_loc)
+        kk = jnp.repeat(k_blk, groups, axis=2) if groups > 1 else k_blk
+        vv = jnp.repeat(v_blk, groups, axis=2) if groups > 1 else v_blk
+        m, l, acc = _chunk_body(q, kk, vv, (m, l, acc), qpos, kpos,
+                                jnp.int32(n * s_loc), causal=causal,
+                                window=window, scale=scale)
+        return ((m, l, acc), (k_next, v_next)), None
+
+    ((m, l, acc), _), _ = lax.scan(hop, ((m0, l0, a0), (k, v)), jnp.arange(n))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B, S_loc, H, Dh)

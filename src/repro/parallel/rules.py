@@ -1,0 +1,39 @@
+"""Sharding rule sets: translate model/cache/batch spec-token trees into
+``NamedSharding``s for a given mesh context.  Single source of truth for the
+token trees is ``models/model.py`` (kept adjacent to init so the structures
+cannot drift — enforced by ``tests/test_sharding_rules.py``)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import model as _model
+from ..models.config import ModelConfig
+from .context import MeshCtx
+
+__all__ = ["param_shardings", "cache_shardings", "batch_shardings", "to_shardings"]
+
+
+def to_shardings(ctx: MeshCtx, token_tree: Any):
+    def leaf(tokens):
+        if tokens is None:
+            return NamedSharding(ctx.mesh, P())
+        return ctx.sharding(*tokens)
+
+    from .context import is_spec_leaf
+    return jax.tree.map(leaf, token_tree, is_leaf=is_spec_leaf)
+
+
+def param_shardings(ctx: MeshCtx, cfg: ModelConfig):
+    return to_shardings(ctx, _model.params_pspecs(cfg, ctx.mp_size))
+
+
+def cache_shardings(ctx: MeshCtx, cfg: ModelConfig, batch: int):
+    dp_div = batch % ctx.dp_size == 0
+    return to_shardings(ctx, _model.cache_pspecs(cfg, batch, dp_div))
+
+
+def batch_shardings(ctx: MeshCtx, cfg: ModelConfig, batch: int):
+    return to_shardings(ctx, _model.batch_pspecs(cfg, batch, ctx.dp_size))

@@ -1,0 +1,5 @@
+from .checkpoint import AsyncCheckpointer, latest_step, restore
+from .fault import FaultTolerantRunner, Heartbeat
+
+__all__ = ["AsyncCheckpointer", "restore", "latest_step",
+           "FaultTolerantRunner", "Heartbeat"]

@@ -1,0 +1,83 @@
+"""Failure detection + restart-from-checkpoint + straggler policy.
+
+At thousands of nodes, failures are routine.  The runtime's contract:
+
+  * **Heartbeat** — every participant bumps a counter; a monitor thread
+    flags members silent for > ``timeout`` (in a real deployment this wraps
+    the coordination-service barrier; here it guards host-side workers —
+    data emitter, checkpoint collector, farm workers).
+  * **FaultTolerantRunner** — wraps the train step; on an exception
+    (device loss, preemption, injected test fault) it restores the last
+    published checkpoint and replays.  Together with the deterministic data
+    pipeline (pure f(seed, step)) this gives exactly-once step semantics.
+  * **Straggler mitigation** — at the farm level (``core/farm.py``): tasks
+    older than straggler_factor × p95 are speculatively re-issued and
+    deduplicated by tag at the collector.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+from .checkpoint import AsyncCheckpointer, latest_step, restore
+
+__all__ = ["Heartbeat", "FaultTolerantRunner"]
+
+
+class Heartbeat:
+    def __init__(self, members, timeout: float = 30.0):
+        self.timeout = timeout
+        self._last: Dict[str, float] = {m: time.monotonic() for m in members}
+        self._lock = threading.Lock()
+
+    def beat(self, member: str) -> None:
+        self._last[member] = time.monotonic()
+
+    def dead(self) -> list:
+        now = time.monotonic()
+        return [m for m, t in self._last.items() if now - t > self.timeout]
+
+
+class FaultTolerantRunner:
+    """run(step_fn) with restore-on-failure semantics.
+
+    step_fn(state, step) -> state.  ``state`` must be checkpointable.
+    """
+
+    def __init__(self, ckpt_dir: str, *, ckpt_every: int = 50,
+                 max_restarts: int = 3, shardings: Optional[Any] = None):
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.shardings = shardings
+        self.restarts = 0
+
+    def run(self, step_fn: Callable[[Any, int], Any], state: Any,
+            start_step: int, n_steps: int,
+            on_step: Optional[Callable[[int, Any], None]] = None) -> Any:
+        step = start_step
+        while step < start_step + n_steps:
+            try:
+                state = step_fn(state, step)
+                if on_step is not None:
+                    on_step(step, state)
+                step += 1
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(state, step)
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                self.ckpt.wait()
+                last = latest_step(self.ckpt_dir)
+                if last is None:
+                    # nothing published yet: replay from the caller's state
+                    step = start_step
+                    continue
+                state = restore(state, self.ckpt_dir, last, self.shardings)
+                step = last
+        self.ckpt.save(state, step)
+        self.ckpt.wait()
+        return state

@@ -1,0 +1,7 @@
+# NOTE: deliberately NO XLA_FLAGS device-count forcing here — unit/smoke
+# tests must see the real single CPU device (the dry-run forces 512 devices
+# itself, and multi-device semantics tests spawn subprocesses).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

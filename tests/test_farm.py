@@ -1,0 +1,166 @@
+"""Farm skeleton semantics: completeness, order preservation, scheduling
+policies, straggler re-dispatch, lock-based interchangeability, MDF cycles,
+and the SPMC allocator."""
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EOS, FnNode, LockQueue, MDFExecutor, MDFTask,
+                        PagePool, PoolExhausted, SPSCQueue, TaskFarm, ff_node)
+
+
+@pytest.mark.parametrize("nworkers", [1, 3, 8])
+@pytest.mark.parametrize("qcls", [SPSCQueue, LockQueue])
+def test_farm_completeness(nworkers, qcls):
+    farm = TaskFarm(nworkers, queue_class=qcls)
+    farm.add_stream(range(200))
+    farm.add_worker(FnNode(lambda x: x * 3))
+    out = farm.run_and_wait()
+    assert sorted(out) == [x * 3 for x in range(200)]
+    assert farm.stats.tasks_collected == 200
+
+
+def test_order_preserving_farm():
+    """Tagged-token collector (paper Fig. 1 right): output == input order
+    even with variable task latency."""
+    import random
+    rnd = random.Random(0)
+
+    def slow_sq(x):
+        time.sleep(rnd.random() * 0.003)
+        return x * x
+
+    farm = TaskFarm(4, preserve_order=True)
+    farm.add_stream(range(60))
+    farm.add_worker(FnNode(slow_sq))
+    assert farm.run_and_wait() == [x * x for x in range(60)]
+
+
+def test_ondemand_scheduling_balances():
+    """On-demand must not starve: with one slow worker, round-robin piles
+    onto it, on-demand doesn't."""
+    class Worker(ff_node):
+        def __init__(self):
+            self.seen = 0
+
+        def svc(self, t):
+            self.seen += 1
+            if t == 0:
+                time.sleep(0.2)  # worker that got task 0 becomes slow
+            return t
+
+    workers = [Worker() for _ in range(3)]
+    farm = TaskFarm(3, scheduling="ondemand", capacity=2)
+    farm.add_stream(range(40))
+    for w in workers:
+        farm.add_worker(w)
+    out = farm.run_and_wait()
+    assert sorted(out) == list(range(40))
+    slow = max(workers, key=lambda w: 1 if w.seen and 0 in range(1) else 0)
+    # the two fast workers should have absorbed most of the stream
+    assert sorted(w.seen for w in workers)[0] < 15
+
+
+def test_straggler_speculation_dedup():
+    """A hung worker's tasks are re-issued; collector sees each tag once."""
+    class Sometimes(ff_node):
+        def svc(self, t):
+            if t == 5:
+                time.sleep(1.0)   # straggler
+            return t
+
+    farm = TaskFarm(3, speculative=True, straggler_factor=2.0,
+                    min_straggler_age=0.05, preserve_order=True)
+    farm.add_stream(range(30))
+    farm.add_worker(Sometimes())
+    out = farm.run_and_wait()
+    assert out == list(range(30))             # exactly-once at the collector
+    assert farm.stats.duplicates_issued >= 1  # speculation actually fired
+
+
+def test_worker_failure_recovered_by_speculation():
+    """A worker thread that dies mid-stream: its tasks age out and are
+    re-issued to the live workers."""
+    class Dies(ff_node):
+        def __init__(self):
+            self.count = 0
+
+        def svc(self, t):
+            self.count += 1
+            if self.count == 3 and t % 3 == 1:
+                raise RuntimeError("simulated node failure")
+            return t
+
+    farm = TaskFarm(3, speculative=True, straggler_factor=2.0,
+                    min_straggler_age=0.05)
+    farm.add_stream(range(30))
+    for _ in range(3):
+        farm.add_worker(Dies())
+    out = farm.run_and_wait()
+    assert sorted(out) == list(range(30))
+    assert farm.stats.worker_failures, "a worker should have died"
+
+
+@given(st.integers(1, 6), st.integers(0, 120))
+@settings(max_examples=20, deadline=None)
+def test_farm_property_any_size(nworkers, n):
+    farm = TaskFarm(nworkers, preserve_order=True)
+    farm.add_stream(range(n))
+    farm.add_worker(FnNode(lambda x: x + 7))
+    assert farm.run_and_wait() == [x + 7 for x in range(n)]
+
+
+# -- MDF executor -----------------------------------------------------------
+def test_mdf_wavefront_dependencies_respected():
+    order = []
+
+    def record(*deps, tag=None):
+        order.append(tag)
+        return sum(deps) + 1
+
+    n = 5
+    tasks = []
+    for i in range(n):
+        for j in range(n):
+            deps = tuple(t for t in [(i - 1, j), (i, j - 1)]
+                         if t[0] >= 0 and t[1] >= 0)
+            tasks.append(MDFTask(tag=(i, j), fn=lambda *d, tag=(i, j): record(*d, tag=tag),
+                                 deps=deps))
+    out = MDFExecutor(nworkers=4).run(tasks)
+    assert len(out) == n * n
+    pos = {t: i for i, t in enumerate(order)}
+    for i in range(n):
+        for j in range(n):
+            if i: assert pos[(i - 1, j)] < pos[(i, j)]
+            if j: assert pos[(i, j - 1)] < pos[(i, j)]
+
+
+# -- SPMC page pool -----------------------------------------------------------
+def test_pool_exhaustion_and_recycle():
+    pool = PagePool(4, nfreers=2)
+    pages = [pool.alloc() for _ in range(4)]
+    assert sorted(pages) == [0, 1, 2, 3]
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    pool.free(pages[0], 0)
+    pool.free(pages[1], 1)
+    got = {pool.alloc(), pool.alloc()}
+    assert got == {pages[0], pages[1]}
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_pool_never_double_allocates(ops):
+    pool = PagePool(8, nfreers=1)
+    held = set()
+    for do_alloc in ops:
+        if do_alloc:
+            p = pool.try_alloc()
+            if p is not None:
+                assert p not in held, "double allocation!"
+                held.add(p)
+        elif held:
+            p = held.pop()
+            pool.free(p, 0)
+    assert len(held) + pool.available() + len(pool._free_rings[0]) == 8

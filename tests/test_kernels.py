@@ -1,0 +1,163 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode), plus hypothesis property tests for Smith-Waterman."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import AA_ALPHABET, BLOSUM50, build_profile
+
+
+# --------------------------------------------------------------------------
+# Smith-Waterman
+# --------------------------------------------------------------------------
+def test_blosum50_symmetric():
+    m = np.asarray(BLOSUM50)
+    assert m.shape == (24, 24)
+    assert np.array_equal(m, m.T)
+    assert m[0, 0] == 5 and m[4, 4] == 13  # A-A=5, C-C=13
+
+
+def test_sw_known_alignment():
+    """Identical sequences: score == sum of diagonal substitution scores."""
+    seq = ops.encode_seq("HEAGAWGHEE")
+    diag = float(sum(BLOSUM50[c, c] for c in np.asarray(seq)))
+    got = float(ops.smith_waterman(seq, seq, tile=64))
+    assert got == diag
+
+
+def test_sw_empty_overlap_zero():
+    a = ops.encode_seq("AAAA")
+    b = ops.encode_seq("WWWW")  # A-W = -3: no positive local alignment
+    assert float(ops.smith_waterman(a, b, tile=64)) == 0.0
+
+
+@pytest.mark.parametrize("gaps", [(10.0, 2.0), (5.0, 2.0)])  # paper's two regimes
+@pytest.mark.parametrize("qlen,dlen", [(7, 13), (30, 64), (64, 200), (129, 70)])
+def test_sw_matches_sequential_ref(gaps, qlen, dlen):
+    go, ge = gaps
+    rng = np.random.default_rng(qlen * dlen)
+    q = jnp.asarray(rng.integers(0, 20, qlen), jnp.int32)
+    d = jnp.asarray(rng.integers(0, 20, dlen), jnp.int32)
+    got = float(ops.smith_waterman(q, d, gap_open=go, gap_extend=ge, tile=64))
+    prof, _ = build_profile(q)
+    want = float(ref.sw_ref(prof, d, go, ge))
+    assert got == want
+
+
+@given(st.integers(1, 25), st.integers(1, 40), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_sw_property_triple_check(qlen, dlen, seed):
+    """pallas == sequential-jax-ref == cell-by-cell numpy, random cases."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 20, qlen)
+    d = rng.integers(0, 20, dlen)
+    m = np.asarray(BLOSUM50)
+    got = float(ops.smith_waterman(jnp.asarray(q, jnp.int32),
+                                   jnp.asarray(d, jnp.int32), tile=64))
+    qs = "".join(AA_ALPHABET[i] for i in q)
+    ds = "".join(AA_ALPHABET[i] for i in d)
+    want = ref.sw_numpy(qs, ds,
+                        lambda a, b: float(m[AA_ALPHABET.index(a), AA_ALPHABET.index(b)]),
+                        10.0, 2.0)
+    assert got == want
+
+
+def test_sw_tile_invariance():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.integers(0, 20, 40), jnp.int32)
+    d = jnp.asarray(rng.integers(0, 20, 300), jnp.int32)
+    scores = {t: float(ops.smith_waterman(q, d, tile=t)) for t in (64, 128, 256)}
+    assert len(set(scores.values())) == 1, scores
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,S,T,D", [
+    (1, 2, 2, 64, 64, 16),
+    (2, 4, 2, 96, 160, 32),   # GQA + ragged
+    (1, 8, 1, 128, 128, 64),  # MQA
+])
+def test_flash_attention_sweep(dtype, B, H, Hkv, S, T, D):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(B * S + T), 3)
+    q = jax.random.normal(k1, (B, H, S, D), dtype)
+    k = jax.random.normal(k2, (B, Hkv, T, D), dtype)
+    v = jax.random.normal(k3, (B, Hkv, T, D), dtype)
+    got = ops.flash_attention_op(q, k, v, causal=True, bq=32, bk=64)
+    want = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_flash_attention_sliding_window(window):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (1, 2, 96, 16))
+    k = jax.random.normal(k2, (1, 2, 96, 16))
+    v = jax.random.normal(k3, (1, 2, 96, 16))
+    got = ops.flash_attention_op(q, k, v, causal=True, window=window, bq=32, bk=32)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_matches_model_chunked_path():
+    """Pallas kernel vs the model's pure-jnp chunked attention (the path the
+    dry-run lowers): same math, two implementations."""
+    from repro.models.attention import attention as model_attn
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, H, Hkv, S, D = 2, 4, 2, 256, 32
+    q = jax.random.normal(k1, (B, S, H, D))
+    k = jax.random.normal(k2, (B, S, Hkv, D))
+    v = jax.random.normal(k3, (B, S, Hkv, D))
+    got_model = model_attn(q, k, v, causal=True, impl="chunked",
+                           q_chunk=64, kv_chunk=64)
+    got_kernel = ops.flash_attention_op(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, bq=64, bk=64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got_model), np.asarray(got_kernel),
+                               atol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# SSD scan
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,T,H,P,N,chunk", [
+    (1, 32, 2, 8, 16, 8),
+    (2, 64, 3, 8, 16, 16),
+    (1, 128, 4, 16, 32, 32),
+])
+def test_ssd_scan_sweep(dtype, b, T, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(T + H), 5)
+    x = jax.random.normal(ks[0], (b, T, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, T, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, T, N), dtype)
+    C = jax.random.normal(ks[4], (b, T, N), dtype)
+    y, h = ops.ssd_scan_op(x, dt, A, B, C, chunk=chunk)
+    y_ref, h_ref = ref.ssd_ref(x.astype(jnp.float32), dt, A,
+                               B.astype(jnp.float32), C.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=tol, rtol=tol)
+
+
+def test_ssd_kernel_matches_model_chunked():
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    b, T, H, P, N = 2, 64, 3, 8, 16
+    x = jax.random.normal(ks[0], (b, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, T, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, T, N))
+    C = jax.random.normal(ks[4], (b, T, N))
+    y1, h1 = ops.ssd_scan_op(x, dt, A, B, C, chunk=16)
+    y2, h2 = ssd_chunked(x, dt, A, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)

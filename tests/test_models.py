@@ -1,0 +1,199 @@
+"""Model correctness: per-arch smoke (fwd/train step, shapes + no NaNs),
+MoE dispatch vs dense oracle, SSD vs sequential recurrence, attention
+chunking vs naive, decode-vs-prefill consistency, head-padding exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import (decode_step, init_cache, init_params, loss_fn,
+                          prefill)
+from repro.models.attention import attention, naive_attention
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=32, key=KEY):
+    ks = jax.random.split(key, 4)
+    if cfg.family == "audio":
+        batch = {"frames": jax.random.normal(ks[0], (B, S, cfg.d_model), jnp.float32),
+                 "labels": jax.random.randint(ks[1], (B, cfg.n_codebooks, S), 0, cfg.vocab_size)}
+    else:
+        batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(ks[2], (B, cfg.vision_patches, cfg.vision_dim))
+    return batch
+
+
+# --------------------------------------------------------------------------
+# per-arch smoke: one forward + one backward on the reduced config
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_and_grad(arch):
+    cfg = ARCHS[arch].smoke()
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(p, b, cfg), has_aux=True))(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: NaN loss"
+    gn = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, f"{arch}: bad grads"
+    # ~ln(vocab) at init (uniform predictions)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0
+
+
+@pytest.mark.parametrize("arch", ["deepseek-coder-33b", "mixtral-8x7b",
+                                  "mamba2-130m", "zamba2-2.7b",
+                                  "llama-3.2-vision-90b", "musicgen-medium"])
+def test_arch_decode_runs(arch):
+    cfg = ARCHS[arch].smoke()
+    params = init_params(cfg, KEY)
+    B, S = 2, 16
+    cache = init_cache(cfg, B, S + 4)
+    if cfg.family == "audio":
+        dbatch = {"frames": jax.random.normal(KEY, (B, 1, cfg.d_model), jnp.float32)}
+    else:
+        dbatch = {"tokens": jax.random.randint(KEY, (B, 1), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        dbatch["vision_embeds"] = jax.random.normal(KEY, (B, cfg.vision_patches, cfg.vision_dim))
+    logits, cache2 = jax.jit(lambda p, b, c, l: decode_step(p, b, c, l, cfg))(
+        params, dbatch, cache, jnp.int32(0))
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    # cache must actually change
+    diff = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)))
+    assert diff > 0
+
+
+def test_decode_matches_full_forward():
+    """Greedy decode over a prompt step-by-step == teacher-forced forward.
+    (dense arch; the strongest end-to-end consistency check we have)"""
+    cfg = ARCHS["phi3-mini-3.8b"].smoke()
+    params = init_params(cfg, KEY)
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab_size)
+    # full forward logits at final position, via prefill
+    logits_full, _ = prefill(params, {"tokens": toks}, cfg)
+    # token-by-token decode
+    cache = init_cache(cfg, B, S + 2)
+    step = jax.jit(lambda p, b, c, l: decode_step(p, b, c, l, cfg))
+    for t in range(S):
+        logits_step, cache = step(params, {"tokens": toks[:, t:t + 1]},
+                                  cache, jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_step), np.asarray(logits_full),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_head_padding_exactness():
+    """Padded-head model == unpadded model numerically (same seed)."""
+    base = ARCHS["phi3-mini-3.8b"].smoke().replace(
+        n_heads=3, n_kv_heads=3, head_dim=16, d_model=48)
+    unpadded = base.replace(pad_heads_to=0)
+    padded = base.replace(pad_heads_to=4)   # pads 3 → 4 heads
+    batch = make_batch(unpadded, B=2, S=16)
+    p_un = init_params(unpadded, KEY)
+    p_pad = init_params(padded, KEY)
+    # copy the unpadded weights into the padded allocation
+    def inject(pu, pp):
+        pp = jax.tree.map(lambda x: x, pp)
+        for blk in ["wq", "wk", "wv"]:
+            pp["blocks"][blk] = pp["blocks"][blk].at[:, :, :3].set(pu["blocks"][blk])
+        pp["blocks"]["wo"] = pp["blocks"]["wo"].at[:, :3].set(pu["blocks"]["wo"])
+        for k in ["norm1", "norm2", "mlp", "embed", "lm_head", "final_norm"]:
+            if k in pu["blocks"]:
+                pp["blocks"][k] = pu["blocks"][k]
+            elif k in pu:
+                pp[k] = pu[k]
+        return pp
+    p_pad = inject(p_un, p_pad)
+    l_un, _ = loss_fn(p_un, batch, unpadded)
+    l_pad, _ = loss_fn(p_pad, batch, padded)
+    np.testing.assert_allclose(float(l_un), float(l_pad), rtol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# MoE: capacity dispatch vs dense oracle
+# --------------------------------------------------------------------------
+def test_moe_local_gather_matches_dense_oracle():
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=16, vocab_size=64,
+                      n_experts=4, top_k=2, capacity_factor=8.0,  # no drops
+                      pad_heads_to=0, pad_vocab_to=0)
+    params = moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    out_d, aux_d = moe_apply(x, params, cfg, axis_name=None, backend="dense")
+    # single-device "sharded" semantics: axis_name=None → local_gather path
+    # still runs through _dispatch_local with e_loc == E
+    out_l, aux_l = moe_apply(x, params, cfg, axis_name=None, backend="local_gather")
+    np.testing.assert_allclose(np.asarray(out_l), np.asarray(out_d),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.0 and adversarial routing, dropped tokens produce zeros,
+    never garbage."""
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=8, vocab_size=64,
+                      n_experts=2, top_k=1, capacity_factor=0.25,
+                      pad_heads_to=0, pad_vocab_to=0)
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), moe_init(KEY, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 16), jnp.float32)
+    out, _ = moe_apply(x, params, cfg, axis_name=None, backend="dense")
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+# --------------------------------------------------------------------------
+# SSD: chunked == sequential
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_ssd_chunked_matches_reference(chunk):
+    ks = jax.random.split(KEY, 5)
+    b, T, H, P, N = 2, 64, 3, 8, 16
+    x = jax.random.normal(ks[0], (b, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, T, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, T, N))
+    C = jax.random.normal(ks[4], (b, T, N))
+    y1, h1 = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    y2, h2 = ssd_reference(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# attention: chunked == naive, incl. SWA & GQA
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("groups", [1, 4])
+def test_chunked_attention_matches_naive(window, groups):
+    ks = jax.random.split(KEY, 3)
+    B, S, Hkv, D = 2, 96, 2, 16
+    H = Hkv * groups
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    got = attention(q, k, v, causal=True, window=window, impl="chunked",
+                    q_chunk=32, kv_chunk=16)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_causal_skip_matches_full_schedule():
+    ks = jax.random.split(KEY, 3)
+    B, S, H, D = 1, 128, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    from repro.models.attention import chunked_attention
+    a = chunked_attention(q, k, v, causal=True, window=None, q_chunk=32,
+                          kv_chunk=32, causal_skip=True)
+    b = chunked_attention(q, k, v, causal=True, window=None, q_chunk=32,
+                          kv_chunk=32, causal_skip=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

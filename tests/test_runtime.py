@@ -1,0 +1,192 @@
+"""Runtime substrate: streaming pipeline determinism, async checkpointing,
+restore-with-reshard (elastic), fault-tolerant restart, optimizer,
+compression, serving engine."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data import SyntheticLM, make_batch_stream
+from repro.launch.serve import Request, ServeEngine
+from repro.launch.train import train
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         int8_dequantize, int8_quantize)
+from repro.runtime.checkpoint import (AsyncCheckpointer, latest_step, restore,
+                                      save_sync)
+
+
+# -- data pipeline -----------------------------------------------------------
+def test_pipeline_deterministic_replay():
+    cfg = ARCHS["phi3-mini-3.8b"].smoke()
+    src = SyntheticLM(cfg, batch=2, seq=8, seed=42)
+    a = src(7)
+    b = src(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # stream from step 3 matches direct source calls
+    pipe = make_batch_stream(cfg, 2, 8, seed=42, start_step=3, n_steps=4)
+    got = list(pipe)
+    assert [s for s, _ in got] == [3, 4, 5, 6]
+    np.testing.assert_array_equal(got[0][1]["tokens"], src(3)["tokens"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    cfg = ARCHS["phi3-mini-3.8b"].smoke()
+    b = SyntheticLM(cfg, batch=2, seq=8, seed=0)(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# -- checkpointing ------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"w": jnp.arange(12.0).reshape(3, 4),
+             "nested": {"b": jnp.ones((5,), jnp.bfloat16)},
+             "step": jnp.int32(7)}
+    save_sync(state, 7, str(tmp_path))
+    assert latest_step(str(tmp_path)) == 7
+    got = restore(state, str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(state["w"]))
+    assert got["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_async_checkpointer_writes_and_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in [10, 20, 30, 40]:
+        ck.save({"x": jnp.full((4,), s)}, s)
+    ck.wait()
+    ck.close()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [30, 40]  # older ones garbage-collected
+    got = restore({"x": jnp.zeros((4,))}, str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.full((4,), 40.0))
+
+
+def test_restore_onto_different_mesh_shape(tmp_path):
+    """Elastic restart: save unsharded, restore with explicit sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    state = {"w": jnp.arange(8.0)}
+    save_sync(state, 1, str(tmp_path))
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    got = restore(state, str(tmp_path), shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(8.0))
+
+
+# -- fault tolerance: end-to-end train with injected failure -------------------
+def test_train_restarts_from_checkpoint_after_failure(tmp_path):
+    cfg = ARCHS["mamba2-130m"].smoke()
+    # run A: uninterrupted 20 steps
+    _, losses_a = train(cfg, steps=20, batch=2, seq=16, ckpt_dir=None, seed=3)
+    # run B: fails at step 12, restarts from ckpt at 10, finishes
+    ckpt = str(tmp_path / "ck")
+    try:
+        train(cfg, steps=20, batch=2, seq=16, ckpt_dir=ckpt, ckpt_every=10,
+              seed=3, inject_failure_at=12)
+    except RuntimeError:
+        pass
+    assert latest_step(ckpt) is not None
+    _, losses_b = train(cfg, steps=20, batch=2, seq=16, ckpt_dir=ckpt,
+                        ckpt_every=10, seed=3)
+    # deterministic pipeline + restore ⇒ identical final loss
+    np.testing.assert_allclose(losses_a[-1], losses_b[-1], rtol=1e-4)
+
+
+def test_train_loss_decreases_on_learnable_data():
+    """A tiny model memorises a repeating synthetic stream."""
+    cfg = ARCHS["phi3-mini-3.8b"].smoke().replace(vocab_size=64)
+    class Repeat:
+        def __call__(self, step):
+            rng = np.random.default_rng(0)  # SAME batch every step
+            t = rng.integers(0, 64, (4, 17), dtype=np.int32)
+            return {"tokens": t[:, :-1], "labels": t[:, 1:]}
+    from repro.launch import train as T
+    import repro.data as D
+    orig = D.make_batch_stream
+    state, losses = None, None
+    from repro.data.pipeline import StreamingPipeline
+    pipe_src = Repeat()
+    # run the loop manually (no monkeypatching train internals)
+    import jax
+    from repro.models import init_params
+    from repro.optim import adamw_init
+    from repro.launch.steps import make_train_step
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, peak_lr=5e-3, warmup=5, total_steps=60))
+    losses = []
+    for i in range(60):
+        b = jax.tree.map(jnp.asarray, pipe_src(i))
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+
+# -- optimizer / schedules / compression ---------------------------------------
+def test_adamw_moves_toward_minimum():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw of w^2
+        params, opt, _ = adamw_update(params, grads, opt, lr=jnp.float32(0.05),
+                                      weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(jnp.arange(100), peak_lr=1.0, warmup_steps=10,
+                        total_steps=100, min_ratio=0.1)
+    assert float(s[0]) == 0.0
+    assert abs(float(s[10]) - 1.0) < 0.11
+    assert float(s[99]) < 0.2
+    assert np.all(np.asarray(s) >= 0)
+
+
+def test_int8_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3
+    q, s = int8_quantize(x)
+    back = int8_dequantize(q, s, x.shape, x.dtype)
+    err = np.abs(np.asarray(back - x))
+    assert err.max() <= float(np.abs(np.asarray(x)).max()) / 127.0 + 1e-6
+
+
+def test_bf16_moments_halve_optimizer_bytes():
+    params = {"w": jnp.zeros((1024,), jnp.bfloat16)}
+    o32 = adamw_init(params, jnp.float32)
+    o16 = adamw_init(params, jnp.bfloat16)
+    assert o32.mu["w"].dtype == jnp.float32 and o16.mu["w"].dtype == jnp.bfloat16
+
+
+# -- serving farm ---------------------------------------------------------------
+def test_serve_engine_order_and_isolation():
+    cfg = ARCHS["phi3-mini-3.8b"].smoke()
+    eng = ServeEngine(cfg, max_batch=3, max_len=128, seed=0)
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(0, cfg.vocab_size, int(rng.integers(2, 6))))
+               for _ in range(7)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=5))
+    results = eng.run()
+    assert len(results) == 7
+    assert [r.tag for r in results] == list(range(7))  # order-preserving
+    assert all(len(r.generated) == 5 for r in results)
+    # isolation: a request's output depends only on its own prompt —
+    # resubmit prompt 0 alone and compare
+    eng2 = ServeEngine(cfg, max_batch=3, max_len=128, seed=0)
+    eng2.submit(Request(rid=0, prompt=prompts[0], max_new=5))
+    solo = eng2.run()[0]
+    batched = next(r for r in results if r.rid == 0)
+    assert solo.generated == batched.generated
+
+
+def test_serve_engine_recycles_slots():
+    cfg = ARCHS["phi3-mini-3.8b"].smoke()
+    eng = ServeEngine(cfg, max_batch=2, max_len=200)
+    for i in range(6):  # 6 requests through 2 slots
+        eng.submit(Request(rid=i, prompt=[1, 2, 3], max_new=4))
+    results = eng.run()
+    assert len(results) == 6
+    assert eng.pool.allocated == 6

@@ -1,0 +1,86 @@
+"""Sharding-rule invariants that the dry-run depends on:
+  * the pspec token trees structurally match the param/cache trees;
+  * every sharded dim divides the production mesh axes (incl. padding);
+  * shape-cell applicability matches DESIGN.md §Arch-applicability.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, SUBQUADRATIC, cell_applicable
+from repro.models import model as M
+from repro.models.config import pad_to
+from repro.parallel.context import is_spec_leaf
+
+DP, MP = 16, 16         # single-pod production mesh
+POD = 2
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_pspecs_tree_matches_params_tree(arch):
+    cfg = ARCHS[arch]
+    shapes = jax.eval_shape(lambda: M.init_params(cfg.smoke(), jax.random.PRNGKey(0)))
+    specs = M.params_pspecs(cfg.smoke(), MP)
+    t1 = jax.tree_util.tree_structure(shapes)
+    t2 = jax.tree_util.tree_structure(specs, is_leaf=is_spec_leaf)
+    assert t1 == t2, f"{arch}: params vs pspecs structure drift"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_sharded_dims_divide_production_mesh(arch, multi_pod):
+    """For every param: dims marked 'mp' divide 16; dims marked 'dp' divide
+    16 (or 32 multi-pod). This is exactly what the dry-run requires."""
+    cfg = ARCHS[arch]
+    dp = DP * (POD if multi_pod else 1)
+    shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = M.params_pspecs(cfg, MP)
+    flat, treedef = jax.tree_util.tree_flatten(shapes)
+    spec_flat = treedef.flatten_up_to(specs)
+    for leaf, spec in zip(flat, spec_flat):
+        if spec is None:
+            continue
+        for dim, tok in enumerate(spec):
+            if tok == "mp":
+                assert leaf.shape[dim] % MP == 0, \
+                    f"{arch}: dim {dim} of {leaf.shape} not divisible by model={MP} ({spec})"
+            elif tok == "dp":
+                assert leaf.shape[dim] % dp == 0, \
+                    f"{arch}: dim {dim} of {leaf.shape} not divisible by dp={dp} ({spec})"
+
+
+def test_head_and_vocab_padding_rules():
+    assert ARCHS["deepseek-coder-33b"].n_heads_padded == 64      # 56 → 64
+    assert ARCHS["starcoder2-7b"].n_heads_padded == 48           # 36 → 48
+    assert ARCHS["musicgen-medium"].n_heads_padded == 32         # 24 → 32 (MHA: kv too)
+    assert ARCHS["phi3-mini-3.8b"].n_heads_padded == 32          # no padding
+    assert ARCHS["mamba2-130m"].vocab_padded == pad_to(50_280, 16)
+    assert ARCHS["kimi-k2-1t-a32b"].vocab_padded == 163_840      # already divisible
+
+
+def test_gqa_groups_integral_after_padding():
+    for arch, cfg in ARCHS.items():
+        if cfg.family == "ssm":
+            continue
+        kv = cfg.n_heads_padded if cfg.n_kv_heads == cfg.n_heads else cfg.n_kv_heads
+        assert cfg.n_heads_padded % kv == 0, arch
+
+
+def test_long_context_cell_policy():
+    ran, skipped = set(), set()
+    for arch in ARCHS:
+        ok, why = cell_applicable(arch, next(s for s in SHAPES if s.name == "long_500k"))
+        (ran if ok else skipped).add(arch)
+    assert ran == SUBQUADRATIC
+    assert "phi3-mini-3.8b" in skipped and "kimi-k2-1t-a32b" in skipped
+    # every other cell runs everywhere
+    for s in SHAPES:
+        if s.name != "long_500k":
+            assert all(cell_applicable(a, s)[0] for a in ARCHS)
+
+
+def test_40_cells_accounted():
+    total = len(ARCHS) * len(SHAPES)
+    assert total == 40
+    runnable = sum(cell_applicable(a, s)[0] for a in ARCHS for s in SHAPES)
+    assert runnable == 33 and total - runnable == 7

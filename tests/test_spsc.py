@@ -1,0 +1,80 @@
+"""SPSC queue: FIFO/lossless invariants, single-threaded + threaded +
+hypothesis property tests (the paper's core primitive must be bulletproof)."""
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EOS, LockQueue, SPSCQueue
+
+
+@pytest.mark.parametrize("qcls", [SPSCQueue, LockQueue])
+def test_fifo_basic(qcls):
+    q = qcls(8)
+    assert q.pop() is SPSCQueue._EMPTY
+    for i in range(5):
+        assert q.push(i)
+    assert [q.pop() for _ in range(5)] == list(range(5))
+    assert q.pop() is SPSCQueue._EMPTY
+
+
+def test_capacity_bound():
+    q = SPSCQueue(4)  # rounds to 8 slots, 7 usable
+    pushed = 0
+    while q.push(pushed):
+        pushed += 1
+    assert pushed == q.capacity
+    assert not q.push(99)
+    assert q.pop() == 0
+    assert q.push(99)  # slot freed
+
+
+@given(st.lists(st.integers(2, 40), min_size=1, max_size=60),
+       st.integers(2, 16))
+@settings(max_examples=50, deadline=None)
+def test_interleaved_push_pop_preserves_order(ops, cap):
+    """Arbitrary interleaving of pushes/pops never reorders or loses items."""
+    q = SPSCQueue(cap)
+    pushed, popped = [], []
+    n = 0
+    for op in ops:
+        if op % 2 == 0:
+            if q.push(n):
+                pushed.append(n)
+            n += 1
+        else:
+            item = q.pop()
+            if item is not SPSCQueue._EMPTY:
+                popped.append(item)
+    while True:
+        item = q.pop()
+        if item is SPSCQueue._EMPTY:
+            break
+        popped.append(item)
+    assert popped == pushed
+
+
+@pytest.mark.parametrize("qcls", [SPSCQueue, LockQueue])
+def test_two_thread_stream(qcls):
+    """1 producer + 1 consumer threads: every item arrives once, in order."""
+    q = qcls(64)
+    n = 5000
+    out = []
+
+    def produce():
+        for i in range(n):
+            q.push_wait(i)
+        q.push_wait(EOS)
+
+    def consume():
+        while True:
+            item = q.pop_wait()
+            if item is EOS:
+                return
+            out.append(item)
+
+    t1 = threading.Thread(target=produce)
+    t2 = threading.Thread(target=consume)
+    t1.start(); t2.start(); t1.join(10); t2.join(10)
+    assert out == list(range(n))
+    assert q.pushes == n + 1 and q.pops == n + 1
