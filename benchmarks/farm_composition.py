@@ -1,0 +1,74 @@
+"""Composition overhead — what the graph runtime adds on top of Fig. 6.
+
+``farm_overhead.py`` measures the hand-off cost of ONE farm; this module
+measures the shapes the composition layer enables (FastFlow tutorial
+TR-12-04):
+
+  * ``pipe2farm`` — ``Pipeline(Farm(f, 2), Farm(g, 2))``: per-task cost of
+    a task crossing TWO dispatch/merge arbiter pairs plus the inter-farm
+    SPSC edge, vs the sequential ``g(f(x))`` baseline;
+  * ``feedback``  — a wrap-around farm in which every task makes ``k`` loop
+    trips (collector → emitter SPSC edge) before leaving: per-*trip* cost
+    of the cyclic path, the building block of divide-and-conquer and the
+    macro-data-flow executor (paper Sec. 5).
+
+Same CSV contract as the other benchmark modules:
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Farm, Pipeline
+
+NTASKS = 2_000
+LOOP_TRIPS = 4
+
+
+def _f(x):
+    return x + 1
+
+
+def _g(x):
+    return x * 2
+
+
+def _pipe_of_farms_us(ntasks: int) -> float:
+    net = Pipeline(Farm(_f, 2, ordered=True), Farm(_g, 2, ordered=True))
+    t0 = time.perf_counter()
+    out = net.run_and_wait(range(ntasks))
+    dt = time.perf_counter() - t0
+    assert out == [_g(_f(x)) for x in range(ntasks)]
+    return dt / ntasks * 1e6
+
+
+def _sequential_us(ntasks: int) -> float:
+    t0 = time.perf_counter()
+    out = [_g(_f(x)) for x in range(ntasks)]
+    dt = time.perf_counter() - t0
+    assert len(out) == ntasks
+    return dt / ntasks * 1e6
+
+
+def _feedback_us_per_trip(ntasks: int, trips: int) -> float:
+    def route(res):
+        x, depth = res
+        if depth == 0:
+            return x, []
+        return None, [(x, depth - 1)]
+
+    net = Farm(lambda t: t, 2, feedback=route)
+    t0 = time.perf_counter()
+    out = net.run_and_wait([(x, trips) for x in range(ntasks)])
+    dt = time.perf_counter() - t0
+    assert sorted(out) == list(range(ntasks))
+    return dt / (ntasks * (trips + 1)) * 1e6
+
+
+def run(emit):
+    seq = _sequential_us(NTASKS)
+    pipe = _pipe_of_farms_us(NTASKS)
+    emit("farm_composition_pipe2farm", pipe,
+         f"seq_baseline_us={seq:.3f},overhead_us={max(pipe - seq, 0):.3f}")
+    trip = _feedback_us_per_trip(NTASKS // 2, LOOP_TRIPS)
+    emit("farm_composition_feedback_trip", trip, f"trips={LOOP_TRIPS}")

@@ -1,10 +1,11 @@
 """Benchmark harness — one module per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement):
-  queues.py         — SPSC vs lock queue op cost (substrate of Fig. 6)
-  farm_overhead.py  — Fig. 6: farm overhead vs grain, derived speedup model
-  smith_waterman.py — Fig. 7 + Table 1: SW database search GCUPS
-  roofline.py       — EXPERIMENTS §Roofline terms from the dry-run artifacts
+  queues.py           — SPSC vs lock queue op cost (substrate of Fig. 6)
+  farm_overhead.py    — Fig. 6: farm overhead vs grain, derived speedup model
+  farm_composition.py — graph runtime: pipeline-of-farms + feedback overhead
+  smith_waterman.py   — Fig. 7 + Table 1: SW database search GCUPS
+  roofline.py         — EXPERIMENTS §Roofline terms from the dry-run artifacts
 """
 from __future__ import annotations
 
@@ -18,8 +19,8 @@ def _emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
-    from . import queues, farm_overhead, smith_waterman, roofline
-    for mod in (queues, farm_overhead, smith_waterman, roofline):
+    from . import queues, farm_overhead, farm_composition, smith_waterman, roofline
+    for mod in (queues, farm_overhead, farm_composition, smith_waterman, roofline):
         mod.run(_emit)
     _emit("total_bench_wall", (time.time() - t0) * 1e6, "")
 

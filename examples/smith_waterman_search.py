@@ -1,10 +1,13 @@
 """The paper's application end-to-end (Sec. 4.2): protein database search.
 
-A farm streams ⟨query, subject⟩ pairs through the TPU-adapted Smith-Waterman
-Pallas kernel (BLOSUM50, affine gaps 10-2k), reporting per-query GCUPS and
-the Table-1-style service-time spread.  Second half: the same wavefront DP
-expressed as a *macro data-flow* graph over tiles (paper Sec. 5), showing
-the order-preserving farm doubling as an MDF executor.
+The search is wired through the composable graph API: a two-stage
+``Pipeline(Farm(align), Stage(threshold))`` streams database subjects
+through the TPU-adapted Smith-Waterman Pallas kernel (BLOSUM50, affine
+gaps 10-2k) in an order-preserving farm whose output edge feeds a
+post-processing stage — reporting per-query GCUPS and the Table-1-style
+service-time spread.  Second half: the same wavefront DP expressed as a
+*macro data-flow* graph over tiles (paper Sec. 5), which now runs on the
+graph runtime's wrap-around (collector → emitter) edge.
 
 Run:  PYTHONPATH=src python examples/smith_waterman_search.py
 """
@@ -13,7 +16,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FnNode, MDFExecutor, MDFTask, TaskFarm
+from repro.core import Farm, MDFExecutor, MDFTask, Pipeline, Stage
 from repro.kernels import ops
 from repro.kernels.ref import sw_ref
 from repro.kernels.ops import build_profile
@@ -37,11 +40,11 @@ for name, qlen in queries.items():
         times.append(time.perf_counter() - t0)
         return s
 
-    farm = TaskFarm(2, preserve_order=True)
-    farm.add_stream(db)
-    farm.add_worker(FnNode(align))
+    # graph-composed search: order-preserving farm → post-processing stage
+    net = Pipeline(Farm(align, 2, ordered=True),
+                   Stage(lambda s: round(s, 1)))
     t0 = time.perf_counter()
-    scores = farm.run_and_wait()
+    scores = net.run_and_wait(db)
     wall = time.perf_counter() - t0
     gcups = qlen * db_cells / wall / 1e9
     print(f"{name}: best={max(scores):.0f}  GCUPS={gcups:.6f}  "

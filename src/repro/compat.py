@@ -1,0 +1,87 @@
+"""JAX version-compat shims, centralised.
+
+The repo targets a range of JAX versions; the pinned container ships
+0.4.x, where several APIs the newer code paths use do not exist yet:
+
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)``
+    (explicit-sharding axis typing landed in 0.5/0.6);
+  * ``jax.shard_map`` as a top-level API with ``check_vma=`` (0.4.x has
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep=``);
+  * ``jax.lax.pvary`` and ``jax.typeof(...).vma`` (varying-manual-axes
+    typing).
+
+Everything that needs one of these goes through this module so the
+version split lives in exactly one place.  All helpers degrade to the
+closest older-API equivalent, never to a behaviour change.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+
+__all__ = ["HAS_AXIS_TYPE", "HAS_TOP_LEVEL_SHARD_MAP", "HAS_PVARY",
+           "HAS_AXIS_SIZE", "make_mesh", "shard_map", "pvary", "needs_pvary",
+           "axis_size"]
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_PVARY = hasattr(jax.lax, "pvary")
+HAS_AXIS_SIZE = hasattr(jax.lax, "axis_size")
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a manual mesh axis, from inside ``shard_map``.
+
+    ``lax.axis_size`` is recent; on older JAX the classic idiom
+    ``psum(1, axis)`` constant-folds to the same static int."""
+    if HAS_AXIS_SIZE:
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, auto: bool = True) -> "jax.sharding.Mesh":
+    """``jax.make_mesh`` with ``AxisType.Auto`` axes where supported.
+
+    On JAX without ``jax.sharding.AxisType`` every mesh axis is implicitly
+    auto, so simply omitting ``axis_types`` is the exact equivalent.
+    """
+    if HAS_AXIS_TYPE and auto:
+        types = (jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None):
+    """Top-level ``jax.shard_map`` if present, else the 0.4.x experimental
+    one.  ``check_vma`` maps onto the older ``check_rep`` (both toggle the
+    replication/varying-axes checker)."""
+    if HAS_TOP_LEVEL_SHARD_MAP:
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def pvary(x: Any, axis_names: Sequence[str]) -> Any:
+    """``lax.pvary`` where it exists; identity on older JAX, where manual
+    values are not tracked as axis-varying and no cast is needed."""
+    if HAS_PVARY:
+        return jax.lax.pvary(x, tuple(axis_names))
+    return x
+
+
+def needs_pvary(x: Any, axis_name: str) -> bool:
+    """True if ``x`` does not yet vary over ``axis_name`` (shard_map vma
+    typing).  Always False on JAX without vma typing."""
+    if not HAS_PVARY:
+        return False
+    try:
+        return axis_name not in jax.typeof(x).vma
+    except Exception:  # pragma: no cover - vma typing shape changed
+        return False

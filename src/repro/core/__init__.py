@@ -1,9 +1,11 @@
 # The paper's primary contribution: FastFlow's lock-free streaming layer,
-# host flavour (threads + Lamport SPSC rings) and device flavour (mesh axes
-# + collective-permute SPSC channels).
+# host flavour (threads + Lamport SPSC rings + the graph runtime) and device
+# flavour (mesh axes + collective-permute SPSC channels).
 from .spsc import EOS, SPSCQueue
 from .lockq import LockQueue
-from .farm import FarmStats, FnNode, TaskFarm, ff_node
+from .graph import (GO_ON, Accelerator, Farm, FarmStats, FnNode, Graph, Net,
+                    Pipeline, Source, Stage, Token, compose, ff_node)
+from .farm import TaskFarm
 from .allocator import PagePool, PoolExhausted
 from .mdf import MDFExecutor, MDFTask
 from .dchannel import RingChannel, chain_send, double_buffered_ring, ring_send
@@ -12,6 +14,8 @@ from .dpipeline import pipeline_apply, pipeline_utilisation
 
 __all__ = [
     "EOS", "SPSCQueue", "LockQueue",
+    "GO_ON", "Accelerator", "Farm", "Graph", "Net", "Pipeline", "Source",
+    "Stage", "Token", "compose",
     "FarmStats", "FnNode", "TaskFarm", "ff_node",
     "PagePool", "PoolExhausted",
     "MDFExecutor", "MDFTask",

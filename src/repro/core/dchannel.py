@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size as _axis_size
+
 __all__ = [
     "ring_send",
     "chain_send",
@@ -42,7 +44,7 @@ def ring_send(x: PyTree, axis_name: str, displacement: int = 1) -> PyTree:
 
     Single producer / single consumer per edge; no barrier semantics.
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     perm = [(i, (i + displacement) % n) for i in range(n)]
     return jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), x)
 
@@ -52,7 +54,7 @@ def chain_send(x: PyTree, axis_name: str, displacement: int = 1) -> PyTree:
 
     Devices with no inbound edge receive zeros (an empty slot).
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     perm = [(i, i + displacement) for i in range(n) if 0 <= i + displacement < n]
     return jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), x)
 
@@ -110,7 +112,7 @@ def double_buffered_ring(
     XLA's async collective-permute overlap the two).  This is the canonical
     schedule used by ring attention and ring MoE dispatch in this repo.
     """
-    n_axis = lax.axis_size(axis_name)
+    n_axis = _axis_size(axis_name)
     hops = n_axis if hops is None else hops
 
     def step(state, hop):

@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size as _axis_size
+
 from .dchannel import ring_send
 
 __all__ = ["dispatch", "combine", "farm_map", "DispatchInfo"]
@@ -70,7 +72,7 @@ def dispatch(
     payload on the wire (e.g. bf16 dispatch for fp32 compute) — a
     collective-bytes optimisation logged in EXPERIMENTS §Perf.
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     L, d = items.shape
     pos, valid = _bucket_positions(dest, n, capacity)
     send = jnp.zeros((n, capacity, d), items.dtype)
@@ -102,7 +104,7 @@ def _ring_exchange(send: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     extraction/compute; in the MoE client the per-hop expert matmul sits in
     that shadow.
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     me = lax.axis_index(axis_name)
 
     def hop(block, h):

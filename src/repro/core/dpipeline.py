@@ -23,17 +23,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import (axis_size as _axis_size, needs_pvary as _needs_pvary,
+                      pvary as _pvary)
 from .dchannel import chain_send
 
 __all__ = ["pipeline_apply", "pipeline_utilisation"]
-
-
-def _needs_pvary(x, axis_name: str) -> bool:
-    """True if ``x`` does not yet vary over ``axis_name`` (shard_map vma)."""
-    try:
-        return axis_name not in jax.typeof(x).vma
-    except Exception:  # pragma: no cover - older jax without vma
-        return False
 
 
 def pipeline_utilisation(n_stages: int, n_micro: int) -> float:
@@ -68,7 +62,7 @@ def pipeline_apply(
       leave the shard_map with an unsharded spec; ``collect="local"`` returns
       the raw per-stage emit.
     """
-    n_stages = lax.axis_size(axis_name)
+    n_stages = _axis_size(axis_name)
     stage = lax.axis_index(axis_name)
     m = microbatches.shape[0]
     ticks = m + n_stages - 1
@@ -79,7 +73,7 @@ def pipeline_apply(
         # stage 0's "queue" is the input stream itself
         idx = jnp.clip(t, 0, m - 1)
         first_in = lax.dynamic_index_in_dim(microbatches, idx, keepdims=False)
-        first_in = lax.pvary(first_in, (axis_name,)) if _needs_pvary(first_in, axis_name) else first_in
+        first_in = _pvary(first_in, (axis_name,)) if _needs_pvary(first_in, axis_name) else first_in
         x = jnp.where(stage == 0, first_in, inbound)
         active = (t >= stage) & (t - stage < m)
         y = stage_fn(stage_params, x)
@@ -92,7 +86,7 @@ def pipeline_apply(
 
     init = jnp.zeros(mb_shape, microbatches.dtype)
     if _needs_pvary(init, axis_name):
-        init = lax.pvary(init, (axis_name,))
+        init = _pvary(init, (axis_name,))
     _, emitted = lax.scan(tick, init, jnp.arange(ticks))
     # emitted[t] holds microbatch (t - (S-1)); realign to microbatch order
     out = lax.dynamic_slice_in_dim(emitted, n_stages - 1, m, axis=0)

@@ -6,9 +6,14 @@ Topology (all edges are lock-free SPSC rings — never a shared MPMC):
             --spsc--> Worker_1 --spsc---> Collector
             --spsc--> ...      --spsc--/
 
-The Emitter and Collector are the paper's *active arbiters*: the only
-multi-party coordination in the network is performed by them walking their
-private SPSC endpoints, so no lock or atomic op ever guards a queue.
+As of the graph-runtime refactor this module is a thin facade: the Emitter
+and Collector arbiters, tagged-token ordering, straggler re-issue and the
+EOS protocol all live in reusable machinery in :mod:`.graph`
+(``DispatchVertex`` / ``MergeVertex`` / ``WorkerVertex``), where they are
+shared by every skeleton — ``TaskFarm`` here is simply the seed's original
+API bound to a one-farm :class:`repro.core.graph.Graph`.  Use
+``graph.Farm`` / ``graph.Pipeline`` / ``graph.compose`` directly to build
+composed networks (pipelines of farms, farms with wrap-around edges, ...).
 
 Features reproduced from the paper:
   * ``ff_node`` API with ``svc`` / ``svc_init`` / ``svc_end`` (Fig. 2);
@@ -32,69 +37,16 @@ over an otherwise identical farm.
 """
 from __future__ import annotations
 
-import threading
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Type
+from typing import Any, List, Optional, Sequence, Type
 
-from .spsc import EOS, SPSCQueue
+from .graph import Farm, FarmStats, FnNode, Graph, _SeqNode, ff_node
+from .spsc import SPSCQueue
 
 __all__ = ["ff_node", "FnNode", "TaskFarm", "FarmStats"]
 
 
-class ff_node:
-    """Base class for farm entities (paper Fig. 2)."""
-
-    def svc_init(self) -> None:  # noqa: D401
-        """Called once in the entity's own thread before the stream starts."""
-
-    def svc(self, task: Any) -> Any:
-        """Process one task. Emitters receive ``None`` and return the next
-        task (or ``None`` for end-of-stream); workers/collectors receive a
-        task and return a result."""
-        raise NotImplementedError
-
-    def svc_end(self) -> None:
-        """Called once after EOS has been processed."""
-
-
-class FnNode(ff_node):
-    """Wrap a plain callable as an ``ff_node``."""
-
-    def __init__(self, fn: Callable[[Any], Any]):
-        self._fn = fn
-
-    def svc(self, task: Any) -> Any:
-        return self._fn(task)
-
-
-@dataclass
-class _Msg:
-    tag: int
-    payload: Any
-    issued_at: float = 0.0
-    duplicate: bool = False
-
-
-@dataclass
-class FarmStats:
-    tasks_emitted: int = 0
-    tasks_collected: int = 0
-    duplicates_issued: int = 0
-    duplicates_dropped: int = 0
-    per_worker: Dict[int, int] = field(default_factory=dict)
-    latencies: List[float] = field(default_factory=list)
-    worker_failures: List = field(default_factory=list)
-
-    def p95_latency(self) -> float:
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
-
-
 class TaskFarm:
-    """Emitter → N workers → Collector over SPSC rings.
+    """Emitter → N workers → Collector over SPSC rings (graph-backed).
 
     Parameters
     ----------
@@ -122,26 +74,19 @@ class TaskFarm:
         assert nworkers >= 1
         assert scheduling in ("rr", "ondemand")
         self.nworkers = nworkers
+        self.queue_class = queue_class
+        self.capacity = capacity
         self.preserve_order = preserve_order
         self.scheduling = scheduling
         self.speculative = speculative
         self.straggler_factor = straggler_factor
         self.min_straggler_age = min_straggler_age
-        self._to_worker = [queue_class(capacity) for _ in range(nworkers)]
-        self._from_worker = [queue_class(capacity) for _ in range(nworkers)]
         self._emitter: Optional[ff_node] = None
         self._workers: List[ff_node] = []
         self._collector: Optional[ff_node] = None
-        self._threads: List[threading.Thread] = []
+        self._graph: Optional[Graph] = None
         self.results: List[Any] = []
         self.stats = FarmStats()
-        # Collector-written / emitter-read completion set.  Single writer
-        # (collector) per key; the emitter only reads — a benign race whose
-        # worst case is one redundant duplicate, which the collector drops.
-        self._done_tags: Dict[int, bool] = {}
-        self._inflight: Dict[int, _Msg] = {}
-        self._stream_closed = threading.Event()
-        self._failed: List[BaseException] = []
 
     # -- wiring (paper Fig. 2 API) -----------------------------------------
     def add_emitter(self, node: ff_node) -> "TaskFarm":
@@ -158,152 +103,7 @@ class TaskFarm:
 
     def add_stream(self, items: Sequence[Any]) -> "TaskFarm":
         """Convenience: emitter that replays a finite sequence."""
-        it = iter(items)
-
-        class _Seq(ff_node):
-            def svc(self, _):
-                try:
-                    return next(it)
-                except StopIteration:
-                    return None
-
-        return self.add_emitter(_Seq())
-
-    # -- threads -------------------------------------------------------------
-    def _emitter_loop(self) -> None:
-        em = self._emitter
-        assert em is not None
-        em.svc_init()
-        rr = 0
-        tag = 0
-        try:
-            while True:
-                task = em.svc(None)
-                if task is None:
-                    break
-                msg = _Msg(tag=tag, payload=task, issued_at=time.monotonic())
-                self._inflight[tag] = msg
-                widx = self._pick_worker(rr)
-                rr += 1
-                self._to_worker[widx].push_wait(msg)
-                self.stats.tasks_emitted += 1
-                tag += 1
-                if self.speculative and tag % 32 == 0:
-                    self._respeculate(rr)
-            # watchdog phase: keep re-issuing stragglers until all collected
-            while self.speculative and any(
-                t not in self._done_tags for t in self._inflight
-            ):
-                rr = self._respeculate(rr)
-                time.sleep(0.002)
-        except BaseException as e:  # pragma: no cover - surfaced in wait()
-            self._failed.append(e)
-        finally:
-            for q in self._to_worker:
-                q.push_wait(EOS)
-            em.svc_end()
-            self._stream_closed.set()
-
-    def _pick_worker(self, rr: int) -> int:
-        if self.scheduling == "ondemand":
-            # shortest-queue: reading len() of an SPSC from a third thread is
-            # heuristically stale but safe — exactly FastFlow's on-demand mode.
-            return min(range(self.nworkers), key=lambda w: len(self._to_worker[w]))
-        return rr % self.nworkers
-
-    def _respeculate(self, rr: int) -> int:
-        now = time.monotonic()
-        p95 = max(self.stats.p95_latency(), self.min_straggler_age)
-        threshold = self.straggler_factor * p95
-        for t, msg in list(self._inflight.items()):
-            if t in self._done_tags:
-                continue
-            if now - msg.issued_at > threshold:
-                dup = _Msg(tag=msg.tag, payload=msg.payload, issued_at=now, duplicate=True)
-                widx = self._pick_worker(rr)
-                rr += 1
-                if self._to_worker[widx].push(dup):
-                    # re-arm the age clock; a still-stale tag (e.g. its copy
-                    # landed on a dead worker) will speculate again, to a
-                    # different worker (rr advanced) — this is what makes the
-                    # farm survive worker loss, not just slowness.
-                    msg.issued_at = now
-                    self.stats.duplicates_issued += 1
-        return rr
-
-    def _worker_loop(self, widx: int) -> None:
-        node = self._workers[widx]
-        node.svc_init()
-        q_in, q_out = self._to_worker[widx], self._from_worker[widx]
-        try:
-            while True:
-                msg = q_in.pop_wait()
-                if msg is EOS:
-                    break
-                result = node.svc(msg.payload)
-                q_out.push_wait(_Msg(tag=msg.tag, payload=result, issued_at=msg.issued_at))
-                self.stats.per_worker[widx] = self.stats.per_worker.get(widx, 0) + 1
-        except BaseException as e:
-            if self.speculative:
-                # fault tolerance: a dying worker is survivable — its
-                # outstanding tags age out and re-speculate to live workers.
-                self.stats.worker_failures.append((widx, repr(e)))
-            else:
-                self._failed.append(e)
-        finally:
-            q_out.push_wait(EOS)
-            node.svc_end()
-
-    def _collector_loop(self) -> None:
-        col = self._collector
-        if col is not None:
-            col.svc_init()
-        eos_seen = 0
-        next_tag = 0
-        reorder: Dict[int, Any] = {}
-
-        def deliver(payload: Any) -> None:
-            if col is not None:
-                out = col.svc(payload)
-                if out is not None:
-                    self.results.append(out)
-            else:
-                self.results.append(payload)
-
-        try:
-            while eos_seen < self.nworkers:
-                progress = False
-                for q in self._from_worker:
-                    msg = q.pop()
-                    if msg is SPSCQueue._EMPTY:
-                        continue
-                    progress = True
-                    if msg is EOS:
-                        eos_seen += 1
-                        continue
-                    if msg.tag in self._done_tags:
-                        self.stats.duplicates_dropped += 1
-                        continue
-                    self._done_tags[msg.tag] = True
-                    self.stats.tasks_collected += 1
-                    self.stats.latencies.append(time.monotonic() - msg.issued_at)
-                    if self.preserve_order:
-                        reorder[msg.tag] = msg.payload
-                        while next_tag in reorder:
-                            deliver(reorder.pop(next_tag))
-                            next_tag += 1
-                    else:
-                        deliver(msg.payload)
-                if not progress:
-                    time.sleep(0.000_05)
-            # flush any residue (can only happen if tags were skipped upstream)
-            for t in sorted(reorder):
-                deliver(reorder.pop(t))
-        except BaseException as e:  # pragma: no cover
-            self._failed.append(e)
-        finally:
-            if col is not None:
-                col.svc_end()
+        return self.add_emitter(_SeqNode(items))
 
     # -- lifecycle -----------------------------------------------------------
     def run(self) -> "TaskFarm":
@@ -311,23 +111,26 @@ class TaskFarm:
         if len(self._workers) == 1 and self.nworkers > 1:
             self._workers = self._workers * self.nworkers
         assert len(self._workers) == self.nworkers
-        mk = threading.Thread
-        self._threads = [mk(target=self._collector_loop, name="ff-collector", daemon=True)]
-        self._threads += [
-            mk(target=self._worker_loop, args=(w,), name=f"ff-worker-{w}", daemon=True)
-            for w in range(self.nworkers)
-        ]
-        self._threads.append(mk(target=self._emitter_loop, name="ff-emitter", daemon=True))
-        for t in self._threads:
-            t.start()
+        net = Farm(
+            list(self._workers),
+            emitter=self._emitter,
+            collector=self._collector,
+            ordered=self.preserve_order,
+            scheduling=self.scheduling,
+            speculative=self.speculative,
+            straggler_factor=self.straggler_factor,
+            min_straggler_age=self.min_straggler_age,
+            stats=self.stats,
+        )
+        self._graph = net.to_graph(queue_class=self.queue_class,
+                                   capacity=self.capacity)
+        self._graph.results = self.results  # alias the pre-exposed sink
+        self._graph.run()
         return self
 
     def wait(self, timeout: Optional[float] = None) -> List[Any]:
-        for t in self._threads:
-            t.join(timeout)
-        if self._failed:
-            raise self._failed[0]
-        return self.results
+        assert self._graph is not None, "call run() first"
+        return self._graph.wait(timeout)
 
     def run_and_wait(self) -> List[Any]:
         return self.run().wait()

@@ -1,0 +1,910 @@
+"""Composable streaming-network graph runtime — the paper's middle layer.
+
+FastFlow (paper Sec. 2-3) is a *layered* design and this module is the layer
+the seed was missing: between the lock-free SPSC ring (``spsc.py``, paper
+Sec. 3.1) and the closed skeletons (farm / pipeline) sits a runtime for
+**arbitrary streaming networks** in which any ``ff_node`` is a vertex, every
+edge is an SPSC ring, and all multi-party coordination is performed by
+*active arbiters* walking their private ring endpoints — never a lock or an
+atomic RMW on the data path.
+
+Construct-to-paper map
+----------------------
+===============================  ==============================================
+Construct (this module)          Paper section / figure
+===============================  ==============================================
+``SPSCQueue`` edge               Sec. 3.1 "Fast SPSC queues" (Lamport ring)
+``Graph`` / ``Vertex``           Sec. 2, Fig. 1: streaming networks as graphs
+                                 of concurrent entities over SPSC channels
+``ff_node`` (svc/svc_init/_end)  Fig. 2: the programming-model node API
+``DispatchVertex``               Fig. 1-2 "Emitter" — active arbiter that
+                                 fans one logical stream out over private
+                                 SPSC rings (round-robin / on-demand)
+``MergeVertex``                  Fig. 1-2 "Collector" — active arbiter that
+                                 fans many rings into one logical stream
+``Farm(ordered=True)``           Fig. 1 (right): tagged tokens reordered at
+                                 the collector (tagged-token macro data-flow)
+``Pipeline`` / ``compose``       Sec. 3.1 "pipeline skeleton": chain of
+                                 nodes over SPSC edges
+``Farm(feedback=...)``           Sec. 5 wrap-around (collector→emitter) edge
+                                 for divide-and-conquer and cyclic networks;
+                                 termination by loop quiescence
+``Accelerator``                  TR-10-03 "self-offloading": the caller
+                                 thread is the source, ``offload()`` is a
+                                 push onto the accelerator's inbound ring
+macro data-flow executor         Sec. 5 (see ``mdf.py``, built on
+                                 ``Farm(feedback=...)``)
+===============================  ==============================================
+
+Beyond-paper features carried over from the seed farm (now reusable by any
+farm in any composition):
+
+* **straggler re-issue** — the dispatch arbiter speculatively re-sends tasks
+  whose age exceeds ``straggler_factor × p95`` of completed latencies; the
+  merge arbiter deduplicates by tag (exactly-once delivery downstream);
+* **worker-failure tolerance** — a worker thread that dies stops draining
+  its ring; its outstanding tags age out and re-speculate to live workers.
+
+Single-writer discipline (what makes this lock-free): every ring has one
+producer and one consumer vertex; tag bookkeeping in ``TagSpace`` is split
+into dispatch-arbiter-written fields (``next_tag``/``inflight``/``entered``)
+and merge-arbiter-written fields (``done``/``retired``).  Cross-thread reads
+of the other side's fields are benignly stale — the worst case is one
+redundant duplicate, which the merge arbiter drops.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
+
+from .spsc import EOS, SPSCQueue
+
+__all__ = [
+    "GO_ON", "Token", "FarmStats", "TagSpace",
+    "ff_node", "FnNode",
+    "Graph", "Vertex", "StageVertex", "DispatchVertex", "WorkerVertex",
+    "MergeVertex",
+    "Net", "Stage", "Source", "Pipeline", "Farm", "compose", "Accelerator",
+]
+
+_EMPTY = SPSCQueue._EMPTY
+_POLL = 0.000_05  # arbiter poll backoff (matches the SPSC blocking helpers)
+
+
+# ---------------------------------------------------------------------------
+# programming model (paper Fig. 2)
+# ---------------------------------------------------------------------------
+class ff_node:
+    """Base class for network entities (paper Fig. 2)."""
+
+    def svc_init(self) -> None:  # noqa: D401
+        """Called once in the entity's own thread before the stream starts."""
+
+    def svc(self, task: Any) -> Any:
+        """Process one task.  Sources receive ``None`` and return the next
+        task (``None`` = end-of-stream); other nodes receive a task and
+        return a result (``GO_ON`` = nothing to emit, keep streaming)."""
+        raise NotImplementedError
+
+    def svc_end(self) -> None:
+        """Called once after EOS has been processed."""
+
+
+class FnNode(ff_node):
+    """Wrap a plain callable as an ``ff_node``."""
+
+    def __init__(self, fn: Callable[[Any], Any]):
+        self._fn = fn
+
+    def svc(self, task: Any) -> Any:
+        return self._fn(task)
+
+
+class _SeqNode(ff_node):
+    """Source node replaying a finite iterable (then EOS)."""
+
+    def __init__(self, items: Iterable[Any]):
+        self._it = iter(items)
+
+    def svc(self, _):
+        try:
+            return next(self._it)
+        except StopIteration:
+            return None
+
+
+class _GoOn:
+    _instance: Optional["_GoOn"] = None
+
+    def __new__(cls) -> "_GoOn":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return "<GO_ON>"
+
+
+GO_ON = _GoOn()
+
+
+# ---------------------------------------------------------------------------
+# tagged tokens (paper Fig. 1 right) + farm bookkeeping
+# ---------------------------------------------------------------------------
+@dataclass
+class Token:
+    tag: int
+    payload: Any
+    issued_at: float = 0.0
+    duplicate: bool = False
+
+
+@dataclass
+class FarmStats:
+    tasks_emitted: int = 0
+    tasks_collected: int = 0
+    duplicates_issued: int = 0
+    duplicates_dropped: int = 0
+    per_worker: Dict[int, int] = field(default_factory=dict)
+    latencies: List[float] = field(default_factory=list)
+    worker_failures: List = field(default_factory=list)
+
+    def p95_latency(self) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+
+class TagSpace:
+    """Per-farm tag bookkeeping shared by the two arbiters.
+
+    Single-writer split: the dispatch arbiter writes ``next_tag``,
+    ``inflight`` and ``entered``; the merge arbiter writes ``done`` and
+    ``retired``.  ``entered``/``retired`` count tokens entering/leaving a
+    wrap-around loop (see ``MergeVertex._complete`` for the ordering that
+    makes the quiescence check race-free)."""
+
+    __slots__ = ("inflight", "done", "next_tag", "entered", "retired", "stats")
+
+    def __init__(self, stats: Optional[FarmStats] = None):
+        self.inflight: Dict[int, Token] = {}
+        self.done: Dict[int, bool] = {}
+        self.next_tag = 0
+        self.entered = 0
+        self.retired = 0
+        self.stats = stats if stats is not None else FarmStats()
+
+
+# ---------------------------------------------------------------------------
+# graph runtime: vertices (threads) + SPSC edges
+# ---------------------------------------------------------------------------
+class _Aborted(Exception):
+    """Internal: this vertex gave up because another vertex already failed
+    (its consumer may be dead and its ring full — blocking would hang)."""
+
+
+class Vertex:
+    """A network vertex: one thread, private SPSC endpoints."""
+
+    def __init__(self, node: Optional[ff_node] = None, *, name: str = "ff-vertex"):
+        self.node = node
+        self.name = name
+        self.ins: List[Any] = []
+        self.outs: List[Any] = []
+        self.graph: Optional["Graph"] = None
+
+    # -- lifecycle (runs in the vertex's own thread) ------------------------
+    def _run(self) -> None:
+        try:
+            if self.node is not None:
+                self.node.svc_init()
+            self._loop()
+        except _Aborted:
+            pass  # secondary shutdown; the original error is in graph.failed
+        except BaseException as e:
+            self._on_error(e)
+        finally:
+            for q in self.outs:
+                self._push_abortable(q, EOS)
+            if self.node is not None:
+                try:
+                    self.node.svc_end()
+                except BaseException as e:  # pragma: no cover - defensive
+                    self.graph.failed.append(e)
+
+    def _on_error(self, e: BaseException) -> None:
+        self.graph.failed.append(e)
+
+    def _loop(self) -> None:
+        raise NotImplementedError
+
+    def _push_abortable(self, q: Any, item: Any) -> bool:
+        """Blocking push that gives up (returns False) once the graph has a
+        recorded failure — the ring's consumer may be dead, and blocking on
+        a full ring would hang the whole network teardown."""
+        spins = 0
+        while not q.push(item):
+            if self.graph.failed:
+                return False
+            spins += 1
+            if spins > 64:
+                time.sleep(_POLL)
+        return True
+
+    def _deliver(self, payload: Any) -> None:
+        """Emit one raw payload downstream, or into the graph's result sink
+        when this vertex has no outbound edge."""
+        if self.outs:
+            if not self._push_abortable(self.outs[0], payload):
+                raise _Aborted()
+        else:
+            self.graph.results.append(payload)
+
+
+class StageVertex(Vertex):
+    """Generic vertex: any fan-in (nondeterministic merge of untagged
+    payloads), any fan-out (round-robin or broadcast).  With no inbound
+    edges it is a *source*: ``svc(None)`` is called until it returns
+    ``None`` (EOS) — paper Fig. 2's emitter protocol."""
+
+    def __init__(self, node: ff_node, *, route: str = "rr", name: str = "ff-stage"):
+        super().__init__(node, name=name)
+        assert route in ("rr", "bcast")
+        self.route = route
+        self._rr = 0
+
+    def _loop(self) -> None:
+        if not self.ins:  # source
+            while True:
+                out = self.node.svc(None)
+                if out is None or out is EOS:
+                    return
+                if out is GO_ON:
+                    continue
+                self._emit(out)
+        eos: set = set()
+        while len(eos) < len(self.ins):
+            progress = False
+            for i, q in enumerate(self.ins):
+                if i in eos:
+                    continue
+                item = q.pop()
+                if item is _EMPTY:
+                    continue
+                progress = True
+                if item is EOS:
+                    eos.add(i)
+                    continue
+                out = self.node.svc(item)
+                if out is None or out is GO_ON:
+                    continue  # filtered
+                self._emit(out)
+            if not progress:
+                time.sleep(_POLL)
+
+    def _emit(self, out: Any) -> None:
+        if not self.outs:
+            self.graph.results.append(out)
+        elif self.route == "bcast":
+            for q in self.outs:
+                if not self._push_abortable(q, out):
+                    raise _Aborted()
+        else:
+            q = self.outs[self._rr % len(self.outs)]
+            self._rr += 1
+            if not self._push_abortable(q, out):
+                raise _Aborted()
+
+
+class DispatchVertex(Vertex):
+    """The farm's Emitter arbiter (paper Figs. 1-2).
+
+    One logical input — a source ``ff_node``, an upstream ring, or a
+    wrap-around ring — fanned out over private SPSC rings to the workers.
+    Owns tag assignment, the scheduling policy (round-robin / on-demand
+    shortest-queue) and straggler re-issue.  When ``loop_ring`` is set this
+    vertex is also the loop master: it terminates only when every upstream
+    edge has delivered EOS *and* the loop is quiescent
+    (``entered == retired`` and the wrap-around ring is drained)."""
+
+    def __init__(
+        self,
+        tags: TagSpace,
+        node: Optional[ff_node] = None,
+        *,
+        scheduling: str = "rr",
+        speculative: bool = False,
+        straggler_factor: float = 4.0,
+        min_straggler_age: float = 0.05,
+        loop_ring: Optional[Any] = None,
+        name: str = "ff-emitter",
+    ):
+        super().__init__(node, name=name)
+        assert scheduling in ("rr", "ondemand")
+        self.tags = tags
+        self.scheduling = scheduling
+        self.speculative = speculative
+        self.straggler_factor = straggler_factor
+        self.min_straggler_age = min_straggler_age
+        self.loop_ring = loop_ring
+        self._rr = 0
+        # wrap-around tokens stashed while a worker ring is full (see
+        # _push_with_loop_drain: this is what breaks cyclic backpressure)
+        self._stash: List[Any] = []
+
+    # -- scheduling policies ------------------------------------------------
+    def _pick(self) -> int:
+        if self.scheduling == "ondemand":
+            # reading len() of an SPSC from a third thread is heuristically
+            # stale but safe — exactly FastFlow's on-demand mode.
+            return min(range(len(self.outs)), key=lambda w: len(self.outs[w]))
+        return self._rr % len(self.outs)
+
+    def _push_with_loop_drain(self, q: Any, tok: Token) -> None:
+        """Blocking push that keeps draining the wrap-around ring while the
+        target worker ring is full.  Without this, a full worker ring can
+        deadlock the cycle: workers blocked on the merge arbiter, the merge
+        arbiter blocked on the wrap-around ring, and this arbiter blocked
+        here — draining into the local stash breaks the wait cycle.  Gives
+        up once the graph has failed (the ring's worker may be dead)."""
+        spins = 0
+        while not q.push(tok):
+            if self.graph.failed:
+                raise _Aborted()
+            if self.loop_ring is not None:
+                item = self.loop_ring.pop()
+                if item is not _EMPTY:
+                    self._stash.append(item)
+                    continue
+            spins += 1
+            if spins > 64:
+                time.sleep(_POLL)
+
+    def _dispatch(self, task: Any) -> None:
+        ts = self.tags
+        tok = Token(tag=ts.next_tag, payload=task, issued_at=time.monotonic())
+        ts.next_tag += 1
+        ts.inflight[tok.tag] = tok
+        if self.loop_ring is not None:
+            ts.entered += 1
+        widx = self._pick()
+        self._rr += 1
+        self._push_with_loop_drain(self.outs[widx], tok)
+        ts.stats.tasks_emitted += 1
+
+    def _respeculate(self) -> None:
+        ts = self.tags
+        now = time.monotonic()
+        p95 = max(ts.stats.p95_latency(), self.min_straggler_age)
+        threshold = self.straggler_factor * p95
+        for t, tok in list(ts.inflight.items()):
+            if t in ts.done:
+                continue
+            if now - tok.issued_at > threshold:
+                dup = Token(tag=t, payload=tok.payload, issued_at=now, duplicate=True)
+                widx = self._pick()
+                self._rr += 1
+                if self.outs[widx].push(dup):
+                    # re-arm the age clock; a still-stale tag (e.g. its copy
+                    # landed on a dead worker) will speculate again, to a
+                    # different worker (rr advanced) — this is what makes the
+                    # farm survive worker loss, not just slowness.
+                    tok.issued_at = now
+                    ts.stats.duplicates_issued += 1
+
+    def _loop(self) -> None:
+        ts = self.tags
+        ndisp = 0
+        if self.node is not None and not self.ins:
+            # source mode: the emitter node generates the stream
+            while True:
+                task = self.node.svc(None)
+                if task is None or task is EOS:
+                    break
+                if task is GO_ON:
+                    continue
+                self._dispatch(task)
+                ndisp += 1
+                # keep the wrap-around ring moving while we generate
+                if self.loop_ring is not None:
+                    while True:
+                        item = self.loop_ring.pop()
+                        if item is _EMPTY:
+                            break
+                        self._dispatch(item)
+                        ndisp += 1
+                if self.speculative and ndisp % 32 == 0:
+                    self._respeculate()
+            # source exhausted; drain the loop to quiescence
+            while self.loop_ring is not None:
+                progress = False
+                while self._stash:
+                    self._dispatch(self._stash.pop(0))
+                    progress = True
+                while True:
+                    item = self.loop_ring.pop()
+                    if item is _EMPTY:
+                        break
+                    progress = True
+                    self._dispatch(item)
+                if not self._stash and ts.entered == ts.retired \
+                        and self.loop_ring.empty():
+                    break
+                if self.graph.failed:
+                    break  # a vertex died: tokens can never retire
+                if not progress:
+                    time.sleep(_POLL)
+        else:
+            eos: set = set()
+            spec_mark = 0  # dispatches at the last speculation sweep
+            while True:
+                progress = False
+                # wrap-around tokens first: looped-back work is older
+                while self._stash:
+                    self._dispatch(self._stash.pop(0))
+                    ndisp += 1
+                    progress = True
+                if self.loop_ring is not None:
+                    while True:
+                        item = self.loop_ring.pop()
+                        if item is _EMPTY:
+                            break
+                        progress = True
+                        self._dispatch(item)
+                        ndisp += 1
+                for i, q in enumerate(self.ins):
+                    if i in eos:
+                        continue
+                    item = q.pop()
+                    if item is _EMPTY:
+                        continue
+                    progress = True
+                    if item is EOS:
+                        eos.add(i)
+                        continue
+                    if self.node is not None:
+                        # emitter node as per-item scheduler/filter
+                        item = self.node.svc(item)
+                        if item is None or item is GO_ON:
+                            continue
+                    self._dispatch(item)
+                    ndisp += 1
+                if self.speculative and ndisp - spec_mark >= 32:
+                    # per-32-dispatches, not per poll iteration: _respeculate
+                    # sorts the whole latency list and must not run while idle
+                    spec_mark = ndisp
+                    self._respeculate()
+                if len(eos) == len(self.ins) and not self._stash:
+                    if self.loop_ring is None:
+                        break
+                    # Quiescence check — read order matters: ``retired``
+                    # first, then the ring.  The merge arbiter pushes
+                    # wrap-around tasks *before* incrementing ``retired``,
+                    # so if entered == retired here, every looped-back task
+                    # from completed tokens is already visible in the ring.
+                    if ts.entered == ts.retired and self.loop_ring.empty():
+                        break
+                if self.graph.failed:
+                    break  # a vertex died: quiescence can never be reached
+                if not progress:
+                    time.sleep(_POLL)
+        # straggler watchdog: keep re-issuing until everything is collected
+        while self.speculative and any(t not in ts.done for t in ts.inflight):
+            if self.graph.failed:
+                break  # e.g. the collector died: tags can never complete
+            self._respeculate()
+            time.sleep(0.002)
+
+
+class WorkerVertex(Vertex):
+    """Farm worker: one inbound and one outbound ring, tags carried
+    through untouched (the worker never sees the tag)."""
+
+    def __init__(self, node: ff_node, index: int, stats: FarmStats, *,
+                 survivable: bool = False, name: str = "ff-worker"):
+        super().__init__(node, name=name)
+        self.index = index
+        self.stats = stats
+        self.survivable = survivable
+
+    def _loop(self) -> None:
+        q_in, q_out = self.ins[0], self.outs[0]
+        while True:
+            tok = q_in.pop_wait()
+            if tok is EOS:
+                return
+            result = self.node.svc(tok.payload)
+            out = Token(tag=tok.tag, payload=result,
+                        issued_at=tok.issued_at, duplicate=tok.duplicate)
+            if not self._push_abortable(q_out, out):
+                raise _Aborted()
+            self.stats.per_worker[self.index] = self.stats.per_worker.get(self.index, 0) + 1
+
+    def _on_error(self, e: BaseException) -> None:
+        if self.survivable:
+            # fault tolerance: a dying worker is survivable — its
+            # outstanding tags age out and re-speculate to live workers.
+            self.stats.worker_failures.append((self.index, repr(e)))
+        else:
+            self.graph.failed.append(e)
+
+
+class MergeVertex(Vertex):
+    """The farm's Collector arbiter (paper Figs. 1-2).
+
+    Merges the worker rings into one logical stream: exactly-once by tag
+    (duplicates from speculation are dropped), optional reorder-by-tag
+    (``ordered`` — the tagged-token collector of Fig. 1 right), optional
+    collector ``ff_node``, and optional wrap-around routing: ``feedback``
+    decides, per result, what leaves the loop and what goes back around."""
+
+    def __init__(
+        self,
+        tags: TagSpace,
+        node: Optional[ff_node] = None,
+        *,
+        ordered: bool = False,
+        loop_ring: Optional[Any] = None,
+        feedback: Optional[Callable[[Any], Tuple[Any, Iterable[Any]]]] = None,
+        name: str = "ff-collector",
+    ):
+        super().__init__(node, name=name)
+        self.tags = tags
+        self.ordered = ordered
+        self.loop_ring = loop_ring
+        self.feedback = feedback
+
+    def _loop(self) -> None:
+        ts = self.tags
+        eos: set = set()
+        next_tag = 0
+        reorder: Dict[int, Any] = {}
+        while len(eos) < len(self.ins):
+            progress = False
+            for i, q in enumerate(self.ins):
+                if i in eos:
+                    continue
+                tok = q.pop()
+                if tok is _EMPTY:
+                    continue
+                progress = True
+                if tok is EOS:
+                    eos.add(i)
+                    continue
+                if tok.tag in ts.done:
+                    ts.stats.duplicates_dropped += 1
+                    continue
+                ts.done[tok.tag] = True
+                ts.stats.tasks_collected += 1
+                ts.stats.latencies.append(time.monotonic() - tok.issued_at)
+                if self.ordered:
+                    reorder[tok.tag] = tok.payload
+                    while next_tag in reorder:
+                        self._complete(reorder.pop(next_tag))
+                        next_tag += 1
+                else:
+                    self._complete(tok.payload)
+            if not progress:
+                time.sleep(_POLL)
+        # flush any residue (can only happen if tags were skipped upstream)
+        for t in sorted(reorder):
+            self._complete(reorder.pop(t))
+
+    def _complete(self, payload: Any) -> None:
+        if payload is GO_ON:
+            # a worker returning GO_ON emits nothing (ff_node contract);
+            # the tag is already done, the token just retires silently
+            self._retire()
+            return
+        if self.node is not None:
+            payload = self.node.svc(payload)
+            if payload is None or payload is GO_ON:
+                self._retire()
+                return
+        if self.feedback is not None:
+            emit, new_tasks = self.feedback(payload)
+            # push wrap-around tasks BEFORE retiring the token: the dispatch
+            # arbiter's quiescence check relies on this ordering.
+            for t in new_tasks:
+                if not self._push_abortable(self.loop_ring, t):
+                    raise _Aborted()
+            self._retire()
+            if emit is None:
+                return
+            payload = emit
+        else:
+            self._retire()
+        self._deliver(payload)
+
+    def _retire(self) -> None:
+        if self.loop_ring is not None:
+            self.tags.retired += 1
+
+
+class Graph:
+    """A streaming network: vertices (one thread each) + SPSC edges.
+
+    The low-level API (``add`` / ``connect``) supports arbitrary topologies;
+    the skeleton layer (``Pipeline`` / ``Farm`` / ``compose``) builds graphs
+    for the common shapes.  ``results`` collects whatever reaches a vertex
+    with no outbound edge."""
+
+    def __init__(self, *, queue_class: Type = SPSCQueue, capacity: int = 512):
+        self.queue_class = queue_class
+        self.capacity = capacity
+        self.vertices: List[Vertex] = []
+        self.results: List[Any] = []
+        self.failed: List[BaseException] = []
+        self._threads: List[threading.Thread] = []
+
+    def channel(self, capacity: Optional[int] = None,
+                queue_class: Optional[Type] = None) -> Any:
+        qc = queue_class or self.queue_class
+        return qc(capacity or self.capacity)
+
+    def add(self, v: Vertex) -> Vertex:
+        v.graph = self
+        self.vertices.append(v)
+        return v
+
+    def connect(self, src: Vertex, dst: Vertex, *, capacity: Optional[int] = None,
+                queue_class: Optional[Type] = None) -> Any:
+        ring = self.channel(capacity, queue_class)
+        src.outs.append(ring)
+        dst.ins.append(ring)
+        return ring
+
+    def run(self) -> "Graph":
+        assert not self._threads, "graph already running"
+        self._threads = [
+            threading.Thread(target=v._run, name=v.name, daemon=True)
+            for v in self.vertices
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def wait(self, timeout: Optional[float] = None) -> List[Any]:
+        for t in self._threads:
+            t.join(timeout)
+        if self.failed:
+            raise self.failed[0]
+        return self.results
+
+    def run_and_wait(self) -> List[Any]:
+        return self.run().wait()
+
+
+# ---------------------------------------------------------------------------
+# skeleton layer: composable network descriptions
+# ---------------------------------------------------------------------------
+class Net:
+    """A composable description of a streaming sub-network.
+
+    ``_build`` wires the sub-network into a ``Graph`` between an optional
+    inbound ring and (unless terminal) a freshly created outbound ring —
+    this is what makes skeletons close under composition: a ``Farm`` is a
+    vertex of the enclosing ``Pipeline``, and vice versa."""
+
+    def _build(self, g: Graph, in_ring: Optional[Any],
+               terminal: bool) -> Optional[Any]:
+        raise NotImplementedError
+
+    def to_graph(self, stream: Optional[Iterable[Any]] = None, *,
+                 queue_class: Type = SPSCQueue, capacity: int = 512) -> Graph:
+        g = Graph(queue_class=queue_class, capacity=capacity)
+        net: Net = self if stream is None else Pipeline(Source(stream), self)
+        net._build(g, None, True)
+        return g
+
+    def run(self, stream: Optional[Iterable[Any]] = None, **kw) -> Graph:
+        return self.to_graph(stream, **kw).run()
+
+    def run_and_wait(self, stream: Optional[Iterable[Any]] = None, **kw) -> List[Any]:
+        return self.to_graph(stream, **kw).run_and_wait()
+
+
+def _as_net(x: Any) -> Net:
+    if isinstance(x, Net):
+        return x
+    if isinstance(x, ff_node):
+        return Stage(x)
+    if callable(x):
+        return Stage(FnNode(x))
+    raise TypeError(f"cannot interpret {x!r} as a network stage")
+
+
+class Stage(Net):
+    """A single sequential node (paper Fig. 2) as a one-vertex network."""
+
+    def __init__(self, node: Any, *, name: str = "ff-stage"):
+        self.node = node if isinstance(node, ff_node) else FnNode(node)
+        self.name = name
+
+    def _build(self, g, in_ring, terminal):
+        v = g.add(StageVertex(self.node, name=self.name))
+        if in_ring is not None:
+            v.ins.append(in_ring)
+        if terminal:
+            return None
+        ring = g.channel()
+        v.outs.append(ring)
+        return ring
+
+
+class Source(Net):
+    """A stream source: an ``ff_node`` (``svc(None)`` protocol) or any
+    iterable, replayed then EOS."""
+
+    def __init__(self, items: Any, *, name: str = "ff-source"):
+        self.node = items if isinstance(items, ff_node) else _SeqNode(items)
+        self.name = name
+
+    def _build(self, g, in_ring, terminal):
+        assert in_ring is None, "Source cannot have an upstream edge"
+        return Stage(self.node, name=self.name)._build(g, None, terminal)
+
+
+class Pipeline(Net):
+    """Chain sub-networks over SPSC edges (paper Sec. 3.1 pipeline)."""
+
+    def __init__(self, *stages: Any):
+        assert stages, "empty pipeline"
+        self.stages = [_as_net(s) for s in stages]
+
+    def _build(self, g, in_ring, terminal):
+        ring = in_ring
+        for s in self.stages[:-1]:
+            ring = s._build(g, ring, False)
+        return self.stages[-1]._build(g, ring, terminal)
+
+
+def compose(*stages: Any) -> Pipeline:
+    """``compose(a, b, c)`` == ``Pipeline(a, b, c)`` — functional spelling."""
+    return Pipeline(*stages)
+
+
+class Farm(Net):
+    """The farm skeleton (paper Sec. 3.1, Figs. 1-2) as a composable network.
+
+    Parameters
+    ----------
+    workers: one ``ff_node``/callable shared by all worker threads, or a
+        list with one node per worker.
+    nworkers: worker-pool width (defaults to ``len(workers)`` for a list).
+    emitter: optional ``ff_node``.  Standalone farm (no upstream edge): a
+        *source* (``svc(None)`` generates the stream).  Composed farm (an
+        upstream edge exists): a per-item scheduler/filter.
+    collector: optional ``ff_node`` applied to each collected result
+        (``None`` return filters it).
+    ordered: reorder results by tag — Fig. 1 (right) tagged-token collector.
+    scheduling: ``"rr"`` round-robin | ``"ondemand"`` shortest-queue.
+    speculative / straggler_factor / min_straggler_age: straggler re-issue.
+    feedback: enables the wrap-around (collector → emitter) edge, paper
+        Sec. 5.  Called per result as ``feedback(result) -> (emit, tasks)``:
+        ``tasks`` go back around the loop, ``emit`` (unless ``None``) leaves
+        the loop downstream.  Termination is by loop quiescence: upstream
+        EOS ∧ every token retired ∧ wrap-around ring drained.
+    """
+
+    def __init__(
+        self,
+        workers: Any,
+        nworkers: Optional[int] = None,
+        *,
+        emitter: Optional[ff_node] = None,
+        collector: Optional[ff_node] = None,
+        ordered: bool = False,
+        scheduling: str = "rr",
+        speculative: bool = False,
+        straggler_factor: float = 4.0,
+        min_straggler_age: float = 0.05,
+        feedback: Optional[Callable[[Any], Tuple[Any, Iterable[Any]]]] = None,
+        feedback_capacity: int = 1 << 16,
+        queue_class: Optional[Type] = None,
+        capacity: Optional[int] = None,
+        stats: Optional[FarmStats] = None,
+    ):
+        if isinstance(workers, (list, tuple)):
+            nodes = [w if isinstance(w, ff_node) else FnNode(w) for w in workers]
+            nworkers = len(nodes) if nworkers is None else nworkers
+        else:
+            node = workers if isinstance(workers, ff_node) else FnNode(workers)
+            nworkers = 1 if nworkers is None else nworkers
+            nodes = [node] * nworkers
+        assert nworkers >= 1 and len(nodes) == nworkers
+        assert not (ordered and feedback is not None), \
+            "ordering across a wrap-around edge is undefined (tags are " \
+            "re-assigned per loop trip) — use ordered=False with feedback"
+        self.worker_nodes = nodes
+        self.nworkers = nworkers
+        self.emitter = emitter
+        self.collector = collector
+        self.ordered = ordered
+        self.scheduling = scheduling
+        self.speculative = speculative
+        self.straggler_factor = straggler_factor
+        self.min_straggler_age = min_straggler_age
+        self.feedback = feedback
+        self.feedback_capacity = feedback_capacity
+        self.queue_class = queue_class
+        self.capacity = capacity
+        self.stats = stats if stats is not None else FarmStats()
+
+    def _build(self, g, in_ring, terminal):
+        qc = self.queue_class or g.queue_class
+        cap = self.capacity or g.capacity
+        ts = TagSpace(self.stats)
+        loop_ring = qc(self.feedback_capacity) if self.feedback is not None else None
+
+        disp = g.add(DispatchVertex(
+            ts, self.emitter,
+            scheduling=self.scheduling, speculative=self.speculative,
+            straggler_factor=self.straggler_factor,
+            min_straggler_age=self.min_straggler_age,
+            loop_ring=loop_ring,
+        ))
+        if in_ring is not None:
+            disp.ins.append(in_ring)
+        else:
+            assert self.emitter is not None, \
+                "a standalone farm needs an emitter (or compose it after a Source)"
+
+        merge = g.add(MergeVertex(
+            ts, self.collector, ordered=self.ordered,
+            loop_ring=loop_ring, feedback=self.feedback,
+        ))
+        for i, node in enumerate(self.worker_nodes):
+            w = g.add(WorkerVertex(node, i, ts.stats,
+                                   survivable=self.speculative,
+                                   name=f"ff-worker-{i}"))
+            g.connect(disp, w, capacity=cap, queue_class=qc)
+            g.connect(w, merge, capacity=cap, queue_class=qc)
+        if terminal:
+            return None
+        ring = g.channel()
+        merge.outs.append(ring)
+        return ring
+
+
+class Accelerator:
+    """Self-offloading accelerator (TR-10-03): run a network alongside the
+    caller, who streams tasks into it and harvests results later.
+
+    The caller thread is the single producer of the inbound ring (SPSC
+    discipline holds: ``offload`` must be called from one thread), so the
+    main thread of an application can offload kernels to a farm and keep
+    computing — the paper's "accelerator" usage of FastFlow.
+
+        acc = Accelerator(Farm(FnNode(f), 4))
+        for x in tasks: acc.offload(x)
+        results = acc.wait()
+    """
+
+    def __init__(self, net: Any, *, queue_class: Type = SPSCQueue,
+                 capacity: int = 512):
+        self._g = Graph(queue_class=queue_class, capacity=capacity)
+        self._in = self._g.channel()
+        _as_net(net)._build(self._g, self._in, True)
+        self._g.run()
+        self._closed = False
+
+    @property
+    def results(self) -> List[Any]:
+        return self._g.results
+
+    def offload(self, task: Any) -> None:
+        assert not self._closed, "accelerator already EOS'd"
+        self._in.push_wait(task)
+
+    def eos(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._in.push_wait(EOS)
+
+    def wait(self, timeout: Optional[float] = None) -> List[Any]:
+        self.eos()
+        return self._g.wait(timeout)

@@ -39,6 +39,14 @@ class LockQueue:
     def capacity(self) -> int:
         return self._capacity
 
+    def empty(self) -> bool:
+        with self._lock:
+            return not self._buf
+
+    def full(self) -> bool:
+        with self._lock:
+            return len(self._buf) >= self._capacity
+
     def push(self, item: Any) -> bool:
         with self._lock:
             if len(self._buf) >= self._capacity:

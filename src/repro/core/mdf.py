@@ -2,27 +2,31 @@
 
 The paper closes by proposing FastFlow as "a fast macro data-flow executor
 (actually wrapping around the order preserving farm) ... including dynamic
-programming".  This module is that executor: a DAG of named tasks is
-streamed through a farm; the Collector feeds completion events back to the
-Emitter over an SPSC ring — i.e. the network is *cyclic*, exercising the
-paper's claim that arbitrated SPSC composition supports arbitrary streaming
-graphs, loops included.
+programming".  This module is that executor, now expressed directly on the
+graph runtime's wrap-around machinery (:class:`repro.core.graph.Farm` with
+``feedback=``): completed-task events flow from the merge arbiter back to
+the dispatch arbiter over the wrap-around SPSC ring — i.e. the network is
+*cyclic*, exercising the paper's claim that arbitrated SPSC composition
+supports arbitrary streaming graphs, loops included.
 
     Emitter (releases ready tasks) ──> Workers ──> Collector
         ^                                              │
-        └────────────── feedback SPSC ─────────────────┘
+        └────────── wrap-around SPSC (graph.py) ───────┘
 
-`examples/mdf_wavefront.py` uses it to run blocked Smith-Waterman as a
-wavefront dynamic program — the exact workload class the paper names.
+Tasks whose dependencies are all satisfied are fed in as the initial
+stream; each completion releases its newly-ready successors back around
+the loop.  Termination is the graph layer's loop-quiescence protocol (no
+tokens in flight, wrap-around ring drained) — no task counting here.
+
+`examples/smith_waterman_search.py` uses it to run blocked Smith-Waterman
+as a wavefront dynamic program — the exact workload class the paper names.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Sequence, Tuple
 
-from .farm import TaskFarm, ff_node
-from .spsc import SPSCQueue
+from .graph import Farm, FnNode, Pipeline, Source
 
 __all__ = ["MDFTask", "MDFExecutor"]
 
@@ -55,51 +59,27 @@ class MDFExecutor:
                 succs[d].append(t.tag)
 
         results = self.results
-        feedback = SPSCQueue(self.capacity)  # collector -> emitter (the cycle)
         total = len(tasks)
 
-        class _Emitter(ff_node):
-            def __init__(self) -> None:
-                self.ready = [tag for tag, d in indeg.items() if d == 0]
-                self.released = 0
-                self.completed = 0
+        def work(task: MDFTask) -> Tuple[Any, Any]:
+            # dep results were stored by the collector BEFORE the task was
+            # released around the loop, so these reads are safe
+            args = tuple(results[d] for d in task.deps) + tuple(task.extra_args)
+            return (task.tag, task.fn(*args, **task.kwargs))
 
-            def svc(self, _):
-                while True:
-                    # 1. fold in completion events from the feedback ring
-                    while True:
-                        ev = feedback.pop()
-                        if ev is SPSCQueue._EMPTY:
-                            break
-                        self.completed += 1
-                        for s in succs[ev]:
-                            indeg[s] -= 1
-                            if indeg[s] == 0:
-                                self.ready.append(s)
-                    # 2. release a ready task, or terminate, or spin
-                    if self.ready:
-                        self.released += 1
-                        return by_tag[self.ready.pop()]
-                    if self.completed >= total:
-                        return None  # EOS
-                    time.sleep(0.000_05)
+        def release(item: Tuple[Any, Any]):
+            tag, value = item
+            results[tag] = value              # store BEFORE releasing successors
+            ready = []
+            for s in succs[tag]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(by_tag[s])
+            return None, ready                # nothing leaves the loop early
 
-        class _Worker(ff_node):
-            def svc(self, task: MDFTask):
-                args = tuple(results[d] for d in task.deps) + tuple(task.extra_args)
-                return (task.tag, task.fn(*args, **task.kwargs))
-
-        class _Collector(ff_node):
-            def svc(self, item):
-                tag, value = item
-                results[tag] = value          # store BEFORE signalling readiness
-                feedback.push_wait(tag)
-                return None
-
-        farm = TaskFarm(self.nworkers, preserve_order=False)
-        farm.add_emitter(_Emitter())
-        farm.add_worker(_Worker())
-        farm.add_collector(_Collector())
-        farm.run_and_wait()
+        initial = [by_tag[t] for t, d in indeg.items() if d == 0]
+        farm = Farm(FnNode(work), self.nworkers, feedback=release,
+                    feedback_capacity=max(self.capacity, total + 1))
+        Pipeline(Source(initial), farm).run_and_wait(capacity=self.capacity)
         assert len(results) == total, f"deadlock or lost tokens: {len(results)}/{total}"
         return results

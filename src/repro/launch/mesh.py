@@ -3,11 +3,14 @@
 Defined as FUNCTIONS so importing this module never touches jax device
 state (device count is locked at first jax init — the dry-run sets
 XLA_FLAGS before importing anything else).
+
+Mesh construction goes through :func:`repro.compat.make_mesh` so the same
+helper serves every pinned JAX version (``axis_types=`` only exists on
+newer JAX); the tests build their meshes with the same helper.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from ..compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh", "DP_AXES", "MODEL_AXIS"]
 
@@ -22,13 +25,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single pod (256 chips) or 2×16×16 two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for multi-device tests (requires forced host devices)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size as _axis_size
+
 from ..core import dfarm
 from ..parallel.context import psum_compat
 from .config import ModelConfig
@@ -143,7 +145,7 @@ def moe_apply(x: jnp.ndarray, params, cfg: ModelConfig, *,
     if backend == "dense" or axis_name is None:
         out = _moe_dense(tokens, params, gates, ids, cfg)
     else:
-        n = lax.axis_size(axis_name)
+        n = _axis_size(axis_name)
         e_loc = params["w_gate"].shape[0]        # local shard (post shard_map)
         n_groups = E // e_loc
         me = lax.axis_index(axis_name)

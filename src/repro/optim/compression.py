@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size as _axis_size
+
 __all__ = ["int8_quantize", "int8_dequantize", "ef_int8_psum"]
 
 _CHUNK = 1024
@@ -48,7 +50,7 @@ def ef_int8_psum(grads: Any, residual: Any, axis_name: str) -> Tuple[Any, Any]:
     grads/residual: matching pytrees (residual fp32).  Returns
     (reduced_grads, new_residual).  Call inside shard_map over ``axis_name``.
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
 
     def one(g, r):
         x = g.astype(jnp.float32) + r

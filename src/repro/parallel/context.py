@@ -19,6 +19,8 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map as _compat_shard_map
+
 __all__ = ["MeshCtx", "mesh_context", "current_ctx", "shard", "manual_model",
            "is_spec_leaf"]
 
@@ -140,8 +142,8 @@ def manual_model(fn: Callable, in_specs, out_specs) -> Callable:
         ispecs = tuple(ispecs)
     if isinstance(ospecs, list):
         ospecs = tuple(ospecs)
-    return jax.shard_map(fn, mesh=ctx.mesh, in_specs=ispecs, out_specs=ospecs,
-                         check_vma=False)
+    return _compat_shard_map(fn, mesh=ctx.mesh, in_specs=ispecs,
+                             out_specs=ospecs, check_vma=False)
 
 
 def fsdp_gather(tree: Any, spec_tree: Any) -> Any:

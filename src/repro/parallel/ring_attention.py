@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size as _axis_size, needs_pvary, pvary
 from ..core.dchannel import ring_send
 from ..models.attention import _chunk_body
 
@@ -31,7 +32,7 @@ def ring_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                    window: Optional[int] = None) -> jnp.ndarray:
     """q (B, S_loc, H, Dh); k/v (B, S_loc, Hkv, Dh), sequence-sharded."""
     B, s_loc, H, Dh = q.shape
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     me = lax.axis_index(axis_name)
     groups = H // k.shape[2]
     scale = Dh ** -0.5
@@ -41,10 +42,8 @@ def ring_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     l0 = jnp.zeros((B, H, s_loc), jnp.float32)
     a0 = jnp.zeros((B, H, s_loc, Dh), jnp.float32)
     # the accumulators become axis-varying once a hop folds in a kv block
-    try:
-        m0, l0, a0 = (lax.pvary(t, (axis_name,)) for t in (m0, l0, a0))
-    except Exception:  # pragma: no cover - older jax without vma typing
-        pass
+    if needs_pvary(m0, axis_name):
+        m0, l0, a0 = (pvary(t, (axis_name,)) for t in (m0, l0, a0))
 
     def hop(state, h_idx):
         (m, l, acc), (k_blk, v_blk) = state

@@ -1,0 +1,116 @@
+"""Minimal in-repo fallback for ``hypothesis`` (property-based testing).
+
+The real hypothesis is listed in ``requirements-test.txt`` and is used
+whenever importable.  In hermetic environments without it, this shim keeps
+the property-based test modules collectable and *degrades them to
+example-based tests*: ``@given`` draws ``max_examples`` pseudo-random
+examples from the strategies with a fixed seed (deterministic across runs —
+no shrinking, no database, no health checks).
+
+Only the strategy surface this repo's tests use is implemented:
+``integers``, ``booleans``, ``floats``, ``sampled_from``, ``lists``,
+``tuples``.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rnd: rnd.choice(seq))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rnd: random.Random) -> List[Any]:
+        n = rnd.randint(min_size, max_size)
+        return [elements.example(rnd) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rnd: tuple(s.example(rnd) for s in strategies))
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' API
+    """Accepts (and mostly ignores) hypothesis settings; keeps
+    ``max_examples`` so the shimmed ``@given`` draws that many."""
+
+    def __init__(self, max_examples: int = 20, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        inner = fn
+
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(wrapper, "_shim_settings", None)
+                   or getattr(inner, "_shim_settings", None))
+            n = cfg.max_examples if cfg is not None else 20
+            rnd = random.Random(0xFA57F10)  # deterministic example stream
+            for _ in range(n):
+                inner(*args, *(s.example(rnd) for s in strategies), **kwargs)
+
+        # like real hypothesis: the wrapper exposes a zero-arg signature
+        # (otherwise pytest would treat the strategy params as fixtures)
+        # and fn.hypothesis.inner_test (introspected by pytest plugins)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=inner)
+        return wrapper
+
+    return deco
+
+
+def assume(condition: Any) -> bool:
+    """Real hypothesis aborts the example; the shim just skips via early
+    return convention — tests in this repo don't use assume, this exists
+    for forward compatibility."""
+    return bool(condition)
+
+
+def install() -> None:
+    """Register shim modules as ``hypothesis`` / ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "floats", "sampled_from", "lists",
+                 "tuples"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

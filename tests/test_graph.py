@@ -1,0 +1,267 @@
+"""Graph runtime semantics: skeleton composition (pipelines of farms),
+ordering under ordered composition, wrap-around (feedback) termination,
+equivalence with the seed TaskFarm, the self-offloading accelerator, and
+the graph-backed MDF executor — tier-1 for the composition layer."""
+import time
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Accelerator, Farm, FnNode, GO_ON, Graph, LockQueue,
+                        MDFExecutor, MDFTask, Pipeline, Stage, TaskFarm,
+                        compose, ff_node)
+from repro.core.graph import StageVertex
+
+
+def _f(x):
+    return x * 3 + 1
+
+
+def _g(x):
+    return x * x - 2
+
+
+# -- acceptance: composed farms == sequential over a 10k stream --------------
+def test_pipeline_of_farms_matches_sequential_10k():
+    """Pipeline(Farm(f), Farm(g)) must equal g(f(x)) item-for-item over a
+    10k stream (ordered farms ⇒ order preserved end-to-end)."""
+    n = 10_000
+    net = Pipeline(Farm(_f, 4, ordered=True), Farm(_g, 4, ordered=True))
+    out = net.run_and_wait(range(n))
+    assert out == [_g(_f(x)) for x in range(n)]
+
+
+def test_pipeline_of_farms_unordered_same_multiset():
+    n = 2_000
+    out = Pipeline(Farm(_f, 3), Farm(_g, 3)).run_and_wait(range(n))
+    assert sorted(out) == sorted(_g(_f(x)) for x in range(n))
+
+
+def test_compose_mixes_stages_and_farms():
+    out = compose(lambda x: x + 1,
+                  Farm(_f, 3, ordered=True),
+                  lambda x: x - 1).run_and_wait(range(500))
+    assert out == [_f(x + 1) - 1 for x in range(500)]
+
+
+def test_farm_of_pipelines():
+    """A farm whose worker is itself a two-stage computation, and the dual:
+    workers are pipeline stages (farms nest inside pipelines and both close
+    under composition)."""
+    inner = lambda x: _g(_f(x))
+    out = Farm(inner, 4, ordered=True).run_and_wait(range(1_000))
+    assert out == [_g(_f(x)) for x in range(1_000)]
+
+
+def test_stage_filtering_go_on():
+    """A stage returning GO_ON (or None mid-pipeline) filters the item."""
+    def keep_even(x):
+        return x if x % 2 == 0 else GO_ON
+    out = Pipeline(Stage(FnNode(keep_even)), Stage(FnNode(lambda x: x // 2))
+                   ).run_and_wait(range(100))
+    assert out == [x // 2 for x in range(0, 100, 2)]
+
+
+def test_lock_queue_substrate():
+    out = Pipeline(Farm(_f, 2, ordered=True), Farm(_g, 2, ordered=True)
+                   ).run_and_wait(range(300), queue_class=LockQueue)
+    assert out == [_g(_f(x)) for x in range(300)]
+
+
+# -- property: ordering preserved under ordered composition ------------------
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(0, 300))
+@settings(max_examples=12, deadline=None)
+def test_ordered_composition_preserves_order(nw1, nw2, n):
+    out = Pipeline(Farm(_f, nw1, ordered=True),
+                   Farm(_g, nw2, ordered=True)).run_and_wait(range(n))
+    assert out == [_g(_f(x)) for x in range(n)]
+
+
+# -- property: graph-backed TaskFarm ≡ seed farm semantics -------------------
+@given(st.integers(1, 6), st.lists(st.integers(-1000, 1000), max_size=150),
+       st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_taskfarm_matches_reference_semantics(nworkers, stream, ordered):
+    farm = TaskFarm(nworkers, preserve_order=ordered)
+    farm.add_stream(list(stream))
+    farm.add_worker(FnNode(_f))
+    out = farm.run_and_wait()
+    want = [_f(x) for x in stream]
+    assert (out == want) if ordered else (sorted(out) == sorted(want))
+    assert farm.stats.tasks_collected == len(stream)
+
+
+# -- feedback / wrap-around edges --------------------------------------------
+def test_feedback_eos_propagates_without_deadlock():
+    """EOS must drain a cyclic network: every task loops back `depth` times
+    before leaving, and the farm still terminates on upstream EOS."""
+    def route(res):
+        x, depth = res
+        if depth == 0:
+            return x, []            # leaves the loop
+        return None, [(x, depth - 1)]  # goes back around
+
+    stream = [(x, x % 4) for x in range(200)]
+    done = []
+    t0 = time.monotonic()
+    out = Farm(lambda t: t, 3, feedback=route).run_and_wait(stream)
+    assert sorted(out) == list(range(200))
+    assert time.monotonic() - t0 < 30  # terminated, not timed out
+
+
+@given(st.lists(st.integers(0, 6), min_size=0, max_size=80))
+@settings(max_examples=10, deadline=None)
+def test_feedback_property_token_conservation(depths):
+    """Each injected token makes exactly `depth` loop trips then exits:
+    results are conserved 1:1 regardless of loop interleavings."""
+    def route(res):
+        tag, depth = res
+        return (tag, []) if depth == 0 else (None, [(tag, depth - 1)])
+    stream = list(enumerate(depths))
+    out = Farm(lambda t: t, 2, feedback=route).run_and_wait(stream)
+    assert sorted(out) == list(range(len(depths)))
+
+
+def test_feedback_divide_and_conquer_sum():
+    """Recursive range-splitting through the wrap-around edge: sum(0..n)."""
+    def worker(task):
+        lo, hi = task
+        if hi - lo <= 8:
+            return ("leaf", sum(range(lo, hi)))
+        mid = (lo + hi) // 2
+        return ("split", (lo, mid), (mid, hi))
+
+    def route(res):
+        if res[0] == "leaf":
+            return res[1], []
+        return None, [res[1], res[2]]
+
+    n = 1_000
+    parts = Farm(worker, 4, feedback=route).run_and_wait([(0, n)])
+    assert sum(parts) == sum(range(n))
+
+
+def test_feedback_worker_exception_does_not_deadlock():
+    """A raising worker inside a wrap-around farm must surface the error
+    from wait(), not hang the loop-quiescence wait forever."""
+    def worker(t):
+        x, d = t
+        if x == 13 and d == 1:
+            raise ValueError("boom in the loop")
+        return t
+
+    def route(res):
+        x, d = res
+        return (x, []) if d == 0 else (None, [(x, d - 1)])
+
+    import pytest
+    with pytest.raises(ValueError, match="boom in the loop"):
+        Farm(worker, 2, feedback=route).run_and_wait([(x, 2) for x in range(50)])
+
+
+def test_dead_worker_full_ring_raises_not_hangs():
+    """A non-survivable worker death with a full inbound ring must surface
+    the error from wait(), not leave the dispatch arbiter spinning on
+    push() to a ring whose consumer is dead."""
+    import pytest
+
+    def die(x):
+        raise RuntimeError("worker died immediately")
+
+    with pytest.raises(RuntimeError, match="worker died immediately"):
+        Farm(die, 1).run_and_wait(range(5_000), capacity=8)
+
+
+def test_feedback_on_lock_queue_substrate():
+    """The wrap-around quiescence check must work over LockQueue too (same
+    API surface as SPSCQueue, including empty())."""
+    def route(res):
+        x, d = res
+        return (x, []) if d == 0 else (None, [(x, d - 1)])
+    out = Farm(lambda t: t, 2, feedback=route).run_and_wait(
+        [(x, 2) for x in range(100)], queue_class=LockQueue)
+    assert sorted(out) == list(range(100))
+
+
+def test_farm_worker_go_on_filters():
+    """GO_ON from a farm worker emits nothing (same contract as a Stage),
+    including through a composed pipeline."""
+    keep_even = lambda x: x if x % 2 == 0 else GO_ON
+    out = Farm(keep_even, 2, ordered=True).run_and_wait(range(10))
+    assert out == [0, 2, 4, 6, 8]
+    out = Pipeline(Farm(keep_even, 2, ordered=True),
+                   Farm(lambda x: x * 10, 2, ordered=True)).run_and_wait(range(10))
+    assert out == [0, 20, 40, 60, 80]
+
+
+def test_feedback_with_source_emitter():
+    """Standalone farm: a generating emitter AND a wrap-around edge (the
+    dispatch arbiter must drain the loop while and after generating)."""
+    class Src(ff_node):
+        def __init__(self):
+            self.n = 0
+
+        def svc(self, _):
+            self.n += 1
+            return (self.n, 3) if self.n <= 100 else None
+
+    def route(res):
+        x, d = res
+        return (x, []) if d == 0 else (None, [(x, d - 1)])
+
+    out = Farm(lambda t: t, 3, emitter=Src(), feedback=route).run_and_wait()
+    assert sorted(out) == list(range(1, 101))
+
+
+# -- accelerator (self-offloading) -------------------------------------------
+def test_accelerator_offload_and_wait():
+    acc = Accelerator(Farm(_f, 3, ordered=True))
+    for x in range(500):
+        acc.offload(x)
+    assert acc.wait(timeout=30) == [_f(x) for x in range(500)]
+
+
+def test_accelerator_caller_overlaps_with_network():
+    """The offloading thread keeps running while the farm computes."""
+    acc = Accelerator(Farm(lambda x: (time.sleep(0.001), x)[1], 4))
+    overlapped = 0
+    for x in range(50):
+        acc.offload(x)
+        overlapped += 1  # main thread continues immediately
+    assert overlapped == 50
+    assert sorted(acc.wait(timeout=30)) == list(range(50))
+
+
+# -- raw Graph API: hand-built topology --------------------------------------
+def test_raw_graph_fan_out_fan_in():
+    """Two parallel branches built with add/connect, merged at a sink."""
+    g = Graph()
+    src = g.add(StageVertex(_mk_counter(100), name="src"))
+    a = g.add(StageVertex(FnNode(lambda x: ("a", x)), name="a"))
+    b = g.add(StageVertex(FnNode(lambda x: ("b", x)), name="b"))
+    sink = g.add(StageVertex(FnNode(lambda t: t), name="sink"))
+    g.connect(src, a)
+    g.connect(src, b)  # src round-robins over its two out edges
+    g.connect(a, sink)
+    g.connect(b, sink)
+    out = g.run_and_wait()
+    assert sorted(x for _, x in out) == list(range(100))
+    assert {lbl for lbl, _ in out} == {"a", "b"}
+
+
+def _mk_counter(n):
+    it = iter(range(n))
+
+    class _C(ff_node):
+        def svc(self, _):
+            return next(it, None)
+
+    return _C()
+
+
+# -- graph-backed MDF (cycle exercised through the same machinery) -----------
+def test_mdf_runs_on_graph_runtime():
+    tasks = [MDFTask(tag=i, fn=lambda *d, i=i: sum(d) + i,
+                     deps=(i - 1,) if i else ())
+             for i in range(30)]
+    out = MDFExecutor(nworkers=3).run(tasks)
+    assert out[29] == sum(range(30))

@@ -2,16 +2,30 @@
 
 Device count is locked at first jax init, so these run in SUBPROCESSES with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 while the main pytest
-session keeps the real single CPU device.
+session keeps the real single CPU device.  All mesh/shard_map construction
+goes through ``repro.compat`` so the same code runs on pinned 0.4.x JAX
+(no ``AxisType``, no top-level ``jax.shard_map``) and on newer releases.
 """
 import os
 import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Genuinely environment-dependent, not version-dependent: the subprocesses
+# force 8 *host* (CPU) devices, which only takes effect when the CPU backend
+# is the default — on a GPU/TPU container jax would pick that backend and
+# the (8,) meshes would want 8 physical accelerators.
+pytestmark = pytest.mark.skipif(
+    jax.default_backend() != "cpu",
+    reason="subprocess tests force 8 host devices via "
+           "--xla_force_host_platform_device_count, which only applies to "
+           f"the CPU backend (default backend here: {jax.default_backend()!r})",
+)
 
 
 def run_sub(code: str, timeout=560):
@@ -29,15 +43,16 @@ def test_dispatch_combine_roundtrip_and_ring_equivalence():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.core import dispatch, combine
-        mesh = jax.make_mesh((8,), ("w",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("w",))
         items = jnp.arange(64*4, dtype=jnp.float32).reshape(64, 4)
         dest = (jnp.arange(64) * 7 % 8).astype(jnp.int32)
         def f(backend):
             def body(it, de):
                 recv, info = dispatch(it, de, "w", capacity=16, backend=backend)
                 return combine(recv * 2.0, info, "w", backend=backend)
-            return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("w"), P("w")),
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("w"), P("w")),
                                          out_specs=P("w")))(items, dest)
         a2a = np.asarray(f("a2a")); ring = np.asarray(f("ring"))
         np.testing.assert_allclose(a2a, np.asarray(items)*2.0)
@@ -105,17 +120,18 @@ def test_pipeline_skeleton_and_grads():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.core import pipeline_apply, pipeline_utilisation
-        mesh = jax.make_mesh((8,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("stage",))
         M, mb, d = 5, 2, 3
         params = jnp.arange(8, dtype=jnp.float32).reshape(8, 1, 1)
         xs = jnp.ones((M, mb, d))
         def pipe(pl, x):
             return pipeline_apply(lambda p, v: v + p[0], pl, x, axis_name="stage")
-        f = jax.jit(jax.shard_map(pipe, mesh=mesh, in_specs=(P("stage"), P()), out_specs=P()))
+        f = jax.jit(shard_map(pipe, mesh=mesh, in_specs=(P("stage"), P()), out_specs=P()))
         out = np.asarray(f(params, xs))
         np.testing.assert_allclose(out, np.full((M, mb, d), 1 + sum(range(8))))
-        g = jax.jit(jax.grad(lambda p: jnp.sum(jax.shard_map(pipe, mesh=mesh,
+        g = jax.jit(jax.grad(lambda p: jnp.sum(shard_map(pipe, mesh=mesh,
             in_specs=(P("stage"), P()), out_specs=P())(p, xs))))(params)
         np.testing.assert_allclose(np.asarray(g).ravel(), [M*mb*d]*8)
         assert abs(pipeline_utilisation(8, 5) - 5/12) < 1e-9
@@ -127,15 +143,16 @@ def test_ring_attention_matches_reference():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.parallel.ring_attention import ring_attention
         from repro.kernels.ref import attention_ref
-        mesh = jax.make_mesh((8,), ("sp",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("sp",))
         B, S, H, D = 2, 64, 4, 16
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         q = jax.random.normal(ks[0], (B, S, H, D))
         k = jax.random.normal(ks[1], (B, S, H, D))
         v = jax.random.normal(ks[2], (B, S, H, D))
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             lambda q, k, v: ring_attention(q, k, v, axis_name="sp", causal=True),
             mesh=mesh, in_specs=(P(None, "sp"), P(None, "sp"), P(None, "sp")),
             out_specs=P(None, "sp")))
@@ -151,15 +168,16 @@ def test_ef_int8_psum_compression():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.optim import ef_int8_psum
-        mesh = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("dp",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
         r0 = jnp.zeros((256,))
         def body(g_loc, r):
             out, r2 = ef_int8_psum({"g": g_loc[0]}, {"g": r}, "dp")
             return out["g"], r2["g"]
-        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("dp"), P()),
-                                  out_specs=(P(), P()), check_vma=False))
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("dp"), P()),
+                              out_specs=(P(), P()), check_vma=False))
         approx, resid = f(g, r0)
         exact = np.asarray(g).mean(0)            # ef_int8_psum returns the MEAN
         err = np.abs(np.asarray(approx) - exact).max()

@@ -66,10 +66,10 @@ def test_async_checkpointer_writes_and_gc(tmp_path):
 def test_restore_onto_different_mesh_shape(tmp_path):
     """Elastic restart: save unsharded, restore with explicit sharding."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import make_mesh
     state = {"w": jnp.arange(8.0)}
     save_sync(state, 1, str(tmp_path))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data"))}
     got = restore(state, str(tmp_path), shardings=sh)
     assert got["w"].sharding == sh["w"]
