@@ -4,8 +4,22 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement):
   queues.py           — SPSC vs lock queue op cost (substrate of Fig. 6)
   farm_overhead.py    — Fig. 6: farm overhead vs grain, derived speedup model
   farm_composition.py — graph runtime: pipeline-of-farms + feedback overhead
+  skeleton_parity.py  — skeleton IR: same skeleton on both backends
   smith_waterman.py   — Fig. 7 + Table 1: SW database search GCUPS
   roofline.py         — EXPERIMENTS §Roofline terms from the dry-run artifacts
+
+Skeleton API
+------------
+The streaming modules all build the same IR (``repro.core.skeleton``): a
+declarative ``Pipeline`` / ``Farm`` / ``Feedback`` expression, executed by
+``lower(skel, backend=...)``.  The ``threads`` backend lowers to the
+thread/SPSC-ring graph runtime (what ``farm_overhead`` / ``farm_composition``
+cost out, hand-off by hand-off); the ``mesh`` backend lowers the *whole*
+skeleton to one ``shard_map`` program (``pipeline_apply`` of ``farm_map``
+stages — no host hop between farms).  ``skeleton_parity.py`` runs one
+skeleton both ways, asserts identical ordered outputs, and reports the
+per-item hand-off overhead vs the fused lowering — the measured input to
+the ROADMAP's fusion-policy item.
 """
 from __future__ import annotations
 
@@ -19,8 +33,10 @@ def _emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
-    from . import queues, farm_overhead, farm_composition, smith_waterman, roofline
-    for mod in (queues, farm_overhead, farm_composition, smith_waterman, roofline):
+    from . import (queues, farm_overhead, farm_composition, skeleton_parity,
+                   smith_waterman, roofline)
+    for mod in (queues, farm_overhead, farm_composition, skeleton_parity,
+                smith_waterman, roofline):
         mod.run(_emit)
     _emit("total_bench_wall", (time.time() - t0) * 1e6, "")
 

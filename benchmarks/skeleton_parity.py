@@ -1,0 +1,66 @@
+"""Skeleton parity — the same IR on both backends, overhead vs fusion.
+
+``farm_composition.py`` measures what the thread graph adds per hand-off;
+this module measures what the *lowering choice* is worth: one skeleton,
+``Pipeline(Farm(f, W), Farm(g, W))``, executed
+
+  * on the **threads** backend — every task crosses two dispatch/merge
+    arbiter pairs plus the inter-farm SPSC edge (per-item hand-off cost);
+  * on the **mesh** backend — ONE compiled shard_map program (farms fused,
+    no host hop between f and g); reported steady-state, after one warm-up
+    call paid the compile.
+
+The ratio (``fused_speedup``) is the measured argument for the ROADMAP's
+graph-level fusion policy: below the hand-off overhead threshold, lowering
+to the fused program wins regardless of parallel width.  Outputs of the
+two backends are asserted identical (ordering included) on every run, so
+the benchmark doubles as a parity smoke test (CI runs it with a tight item
+budget).
+
+Same CSV contract as the other benchmark modules:
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Farm, Pipeline, lower
+
+NTASKS = 2_000
+NWORKERS = 2
+
+
+def _f(x):
+    return x * 3 + 1
+
+
+def _g(x):
+    return x - 7
+
+
+def run(emit):
+    skel = Pipeline(Farm(_f, NWORKERS, ordered=True),
+                    Farm(_g, NWORKERS, ordered=True))
+    xs = list(range(NTASKS))
+    want = [_g(_f(x)) for x in xs]
+
+    threads = lower(skel, "threads")
+    t0 = time.perf_counter()
+    out_t = threads(xs)
+    dt_threads = time.perf_counter() - t0
+    assert out_t == want, "threads backend output mismatch"
+
+    mesh = lower(skel, "mesh")
+    out_m = mesh(xs)                       # warm-up: pays the XLA compile
+    assert out_m == want, "mesh backend output mismatch"
+    t0 = time.perf_counter()
+    out_m = mesh(xs)
+    dt_mesh = time.perf_counter() - t0
+    assert out_m == want
+
+    us_t = dt_threads / NTASKS * 1e6
+    us_m = dt_mesh / NTASKS * 1e6
+    emit("skeleton_parity_threads", us_t,
+         f"nworkers={NWORKERS},handoff=2xdispatch+2xmerge+1xspsc")
+    emit("skeleton_parity_mesh", us_m,
+         f"one_shard_map=1,fused_speedup={us_t / max(us_m, 1e-9):.2f}")

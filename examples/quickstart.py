@@ -1,7 +1,10 @@
 """Quickstart: the three layers of FastFlow-JAX in ~60 lines.
 
-  1. host streaming: lock-free SPSC farm (the paper's skeleton);
-  2. the paper's application: Smith-Waterman database search through it;
+  1. the skeleton IR: ONE declarative expression, executed on BOTH
+     backends — the host thread/SPSC graph and a single shard_map mesh
+     program (no host hop between stages);
+  2. the paper's application: Smith-Waterman database search through an
+     ordered farm;
   3. the LM framework: one reduced-config train step + one decode step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -11,27 +14,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import FnNode, TaskFarm
+from repro.core import Farm, Pipeline, lower
 from repro.kernels import ops
 from repro.launch.steps import make_train_step
 from repro.models import init_cache, init_params, decode_step
 from repro.optim import adamw_init
 
-# -- 1. farm: square a stream of numbers, order-preserving -------------------
-farm = TaskFarm(nworkers=4, preserve_order=True)
-farm.add_stream(range(10))
-farm.add_worker(FnNode(lambda x: x * x))
-print("farm:", farm.run_and_wait())
+# -- 1. one skeleton, two backends -------------------------------------------
+# Pipeline(Farm(f), Farm(g)) is pure data; lower() picks the runtime.
+skel = Pipeline(Farm(lambda x: x * x, 4, ordered=True),
+                Farm(lambda x: x + 1, 4, ordered=True))
+on_threads = lower(skel, "threads")(range(10))  # threads + SPSC rings
+on_mesh = lower(skel, "mesh")(range(10))        # ONE shard_map: farms fused
+print("threads:", on_threads)
+print("mesh:   ", on_mesh)
+assert on_threads == on_mesh
 
-# -- 2. the paper's app: SW database search ----------------------------------
+# -- 2. the paper's app: SW database search (host-only payloads) --------------
 rng = np.random.default_rng(0)
 query = jnp.asarray(rng.integers(0, 20, 32), jnp.int32)
 db = [jnp.asarray(rng.integers(0, 20, int(n)), jnp.int32)
       for n in rng.integers(20, 80, 8)]
-sw_farm = TaskFarm(2, preserve_order=True)
-sw_farm.add_stream(db)
-sw_farm.add_worker(FnNode(lambda s: float(ops.smith_waterman(query, s, tile=64))))
-print("SW scores:", sw_farm.run_and_wait())
+sw = Farm(lambda s: float(ops.smith_waterman(query, s, tile=64)), 2,
+          ordered=True)
+print("SW scores:", lower(sw, "threads")(db))
 
 # -- 3. LM framework: one train step + one decode step (reduced config) ------
 cfg = ARCHS["mixtral-8x7b"].smoke()

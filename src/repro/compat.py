@@ -21,13 +21,21 @@ from typing import Any, Optional, Sequence
 import jax
 
 __all__ = ["HAS_AXIS_TYPE", "HAS_TOP_LEVEL_SHARD_MAP", "HAS_PVARY",
-           "HAS_AXIS_SIZE", "make_mesh", "shard_map", "pvary", "needs_pvary",
-           "axis_size"]
+           "HAS_AXIS_SIZE", "WHILE_NEEDS_UNCHECKED_REP", "make_mesh",
+           "shard_map", "pvary", "needs_pvary", "axis_size", "vma_align"]
 
 HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
 HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
 HAS_PVARY = hasattr(jax.lax, "pvary")
 HAS_AXIS_SIZE = hasattr(jax.lax, "axis_size")
+
+# 0.4.x's experimental shard_map replication checker has no rule for
+# ``lax.while_loop`` ("No replication rule for while"); the vma-typed
+# checker that ships with top-level ``jax.shard_map`` does.  Callers putting
+# a while_loop inside shard_map (the skeleton mesh backend's feedback farm)
+# must disable the checker on old JAX — behaviour is unchanged, only the
+# static replication audit is skipped.
+WHILE_NEEDS_UNCHECKED_REP = not HAS_TOP_LEVEL_SHARD_MAP
 
 
 def axis_size(axis_name: str) -> int:
@@ -85,3 +93,19 @@ def needs_pvary(x: Any, axis_name: str) -> bool:
         return axis_name not in jax.typeof(x).vma
     except Exception:  # pragma: no cover - vma typing shape changed
         return False
+
+
+def vma_align(x: Any, axis_names: Sequence[str]) -> Any:
+    """Make ``x`` vary over every axis in ``axis_names`` it does not vary
+    over yet.
+
+    The skeleton mesh lowering mixes values of different provenance inside
+    one ``shard_map`` body — stage-invariant microbatches, worker-varying
+    farm buffers, ``axis_index``-derived stage selectors — and newer JAX's
+    varying-manual-axes typing requires the operands of ``select_n`` /
+    ``where`` / ``ppermute`` to agree.  On JAX without vma typing (0.4.x)
+    manual values carry no axis-varying type and this is the identity."""
+    if not HAS_PVARY:
+        return x
+    missing = tuple(a for a in axis_names if needs_pvary(x, a))
+    return pvary(x, missing) if missing else x

@@ -1,25 +1,31 @@
-# The paper's primary contribution: FastFlow's lock-free streaming layer,
-# host flavour (threads + Lamport SPSC rings + the graph runtime) and device
-# flavour (mesh axes + collective-permute SPSC channels).
+# The paper's primary contribution: FastFlow's lock-free streaming layer as
+# ONE skeleton vocabulary (skeleton.py: Pipeline/Farm/Feedback IR) with two
+# backends — host flavour (threads + Lamport SPSC rings + the graph runtime)
+# and device flavour (one shard_map mesh program over collective-permute
+# SPSC channels).  `lower(skel, backend=...)` picks the runtime.
 from .spsc import EOS, SPSCQueue
 from .lockq import LockQueue
-from .graph import (GO_ON, Accelerator, Farm, FarmStats, FnNode, Graph, Net,
-                    Pipeline, Source, Stage, Token, compose, ff_node)
+from .skeleton import (GO_ON, Farm, FarmStats, Feedback, FnNode, LoweringError,
+                       MeshProgram, Pipeline, Skeleton, Source, Stage,
+                       ThreadProgram, as_skeleton, compose, ff_node, lower)
+from .graph import Accelerator, Graph, Net, Token, build
 from .farm import TaskFarm
 from .allocator import PagePool, PoolExhausted
 from .mdf import MDFExecutor, MDFTask
 from .dchannel import RingChannel, chain_send, double_buffered_ring, ring_send
-from .dfarm import combine, dispatch, farm_map
-from .dpipeline import pipeline_apply, pipeline_utilisation
+from .dfarm import combine, dispatch, farm_map, farm_until, roundrobin_dest
+from .dpipeline import negotiate_stage_axis, pipeline_apply, pipeline_utilisation
 
 __all__ = [
     "EOS", "SPSCQueue", "LockQueue",
-    "GO_ON", "Accelerator", "Farm", "Graph", "Net", "Pipeline", "Source",
-    "Stage", "Token", "compose",
+    "GO_ON", "Accelerator", "Farm", "Feedback", "Graph", "Net", "Pipeline",
+    "Skeleton", "Source", "Stage", "Token", "compose",
+    "LoweringError", "MeshProgram", "ThreadProgram", "as_skeleton", "build",
+    "lower",
     "FarmStats", "FnNode", "TaskFarm", "ff_node",
     "PagePool", "PoolExhausted",
     "MDFExecutor", "MDFTask",
     "RingChannel", "chain_send", "double_buffered_ring", "ring_send",
-    "combine", "dispatch", "farm_map",
-    "pipeline_apply", "pipeline_utilisation",
+    "combine", "dispatch", "farm_map", "farm_until", "roundrobin_dest",
+    "negotiate_stage_axis", "pipeline_apply", "pipeline_utilisation",
 ]

@@ -13,7 +13,10 @@ The farm's three entities map onto SPMD pieces:
     order-preserving farm of paper Fig. 1: (dest, pos) *is* the tag).
 
 ``dispatch``/``combine`` are the generic mechanism; MoE expert-parallel
-routing (`models/moe.py`) is its headline client — a token-to-expert farm.
+routing (`models/moe.py`) is its headline client — a token-to-expert farm —
+and the skeleton mesh lowering (`skeleton.MeshProgram`) is the composable
+one: ``farm_map`` is its farm stage, ``roundrobin_dest`` its emitter policy
+and ``farm_until`` its wrap-around (feedback) loop.
 The communication backend is pluggable:
 
   * ``"a2a"``   — one ``lax.all_to_all`` (the symmetric, "fence-like"
@@ -39,7 +42,8 @@ from ..compat import axis_size as _axis_size
 
 from .dchannel import ring_send
 
-__all__ = ["dispatch", "combine", "farm_map", "DispatchInfo"]
+__all__ = ["dispatch", "combine", "farm_map", "farm_until",
+           "roundrobin_dest", "DispatchInfo"]
 
 
 class DispatchInfo(Tuple):
@@ -161,3 +165,78 @@ def farm_map(
     flat = recv.reshape(-1, recv.shape[-1])
     out = worker_fn(flat).reshape(recv.shape[0], capacity, -1)
     return combine(out, info, axis_name, backend=backend)
+
+
+def roundrobin_dest(n_local: int, axis_name: str) -> jnp.ndarray:
+    """The Emitter's round-robin policy on the mesh: destination worker of
+    each local item is its *global* stream index mod the axis size (the
+    skeleton mesh lowering's default scheduling, mirroring the thread
+    dispatch arbiter's ``"rr"`` mode)."""
+    w = _axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    return (me * n_local + jnp.arange(n_local, dtype=jnp.int32)) % w
+
+
+def farm_until(
+    worker_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    loop_while: Callable[[jnp.ndarray], jnp.ndarray],
+    items: jnp.ndarray,          # (L, d) local items
+    dest: jnp.ndarray,           # (L,) destination worker
+    axis_name: str,
+    capacity: int,
+    *,
+    valid=None,
+    max_trips=None,
+    backend: str = "a2a",
+) -> jnp.ndarray:
+    """Feedback farm on the mesh: dispatch → re-apply ``worker_fn`` while
+    ``loop_while`` holds → ordered combine.
+
+    This is the device flavour of the thread farm's wrap-around
+    (collector → emitter) edge: instead of tokens circulating over an SPSC
+    ring, the still-looping rows are a mask on a ``lax.while_loop`` carry
+    between the farm's dispatch and its order-preserving combine — one
+    compiled loop, no host round-trip per trip.
+
+    Semantics match the thread backend's :class:`~repro.core.skeleton.
+    Feedback` exactly (do-while): every item is serviced at least once and
+    emits the first result for which ``loop_while`` is false.  A validity
+    flag travels the wire as an extra feature column so receivers can tell
+    real items from buffer padding: ``valid`` (shape ``(L,)`` or ``(L, 1)``,
+    nonzero = real, default all-valid) marks the caller's own padding rows
+    — e.g. the skeleton mesh program's bucket padding, whose zero rows
+    could otherwise gate the loop forever — and unfilled dispatch capacity
+    slots arrive as zeros, so neither ever drives ``cond``.  ``loop_while``
+    is applied to the ``(rows, d)`` buffer and reduced conjunctively over
+    feature dims; ``max_trips`` (if given) bounds the trip count."""
+    L, d = items.shape
+    if valid is None:
+        flag = jnp.ones((L, 1), items.dtype)
+    else:
+        flag = (valid.reshape(L, 1) != 0).astype(items.dtype)
+    aug = jnp.concatenate([items, flag], axis=1)
+    recv, info = dispatch(aug, dest, axis_name, capacity, backend=backend)
+    flat = recv.reshape(-1, d + 1)
+    valid = flat[:, d] != 0
+
+    def live(x, trips):
+        m = jnp.reshape(loop_while(x), (x.shape[0], -1)).all(axis=1)
+        m = m & valid
+        if max_trips is not None:
+            m = m & (trips < max_trips)
+        return m
+
+    def cond(state):
+        x, trips = state
+        return jnp.any(live(x, trips))
+
+    def trip(state):
+        x, trips = state
+        y = worker_fn(x)
+        x = jnp.where(live(x, trips)[:, None], y, x)
+        return x, trips + 1
+
+    x0 = worker_fn(flat[:, :d])          # do-while: first trip unconditional
+    x, _ = lax.while_loop(cond, trip, (x0, jnp.int32(1)))
+    out = jnp.concatenate([x, flat[:, d:]], axis=1).reshape(recv.shape)
+    return combine(out, info, axis_name, backend=backend)[:, :d]

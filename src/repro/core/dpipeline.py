@@ -23,15 +23,29 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..compat import (axis_size as _axis_size, needs_pvary as _needs_pvary,
-                      pvary as _pvary)
+from ..compat import axis_size as _axis_size, vma_align as _vma_align
 from .dchannel import chain_send
 
-__all__ = ["pipeline_apply", "pipeline_utilisation"]
+__all__ = ["pipeline_apply", "pipeline_utilisation", "negotiate_stage_axis"]
 
 
 def pipeline_utilisation(n_stages: int, n_micro: int) -> float:
     return n_micro / (n_micro + n_stages - 1)
+
+
+def negotiate_stage_axis(n_stages: int, n_devices: int):
+    """Factor ``n_devices`` into a ``(stage, worker)`` mesh for a skeleton
+    with ``n_stages`` pipeline stages.
+
+    When the device count divides evenly, each stage owns a row of
+    ``n_devices / n_stages`` workers and the skeleton mesh lowering streams
+    microbatches with :func:`pipeline_apply`; otherwise the stage axis
+    collapses to 1 and the stage chain runs sequentially inside the same
+    ``shard_map`` body (still one compiled program — the stages are fused,
+    not round-tripped through the host)."""
+    if n_stages > 1 and n_devices >= n_stages and n_devices % n_stages == 0:
+        return n_stages, n_devices // n_stages
+    return 1, max(1, n_devices)
 
 
 def pipeline_apply(
@@ -41,6 +55,7 @@ def pipeline_apply(
     *,
     axis_name: str = "stage",
     collect: str = "psum",
+    vary_axes: tuple = (),
 ) -> jnp.ndarray:
     """Stream ``microbatches`` through the stage chain.
 
@@ -54,6 +69,11 @@ def pipeline_apply(
       microbatches: ``(M, mb, ...)`` array, replicated view; stage 0 reads
         microbatch t at tick t, later stages ignore it and consume their
         inbound SPSC slot instead.
+      vary_axes: extra manual axes the microbatch stream varies over (e.g.
+        the skeleton mesh lowering shards items over its worker axis while
+        pipelining over the stage axis); the carry and the injected stream
+        are vma-aligned over ``(axis_name, *vary_axes)`` so the per-tick
+        ``where`` type-checks on vma-typed JAX.
 
     Returns:
       ``(M, mb, ...)`` outputs as produced by the *last* stage.  With
@@ -73,7 +93,7 @@ def pipeline_apply(
         # stage 0's "queue" is the input stream itself
         idx = jnp.clip(t, 0, m - 1)
         first_in = lax.dynamic_index_in_dim(microbatches, idx, keepdims=False)
-        first_in = _pvary(first_in, (axis_name,)) if _needs_pvary(first_in, axis_name) else first_in
+        first_in = _vma_align(first_in, (axis_name, *vary_axes))
         x = jnp.where(stage == 0, first_in, inbound)
         active = (t >= stage) & (t - stage < m)
         y = stage_fn(stage_params, x)
@@ -84,9 +104,8 @@ def pipeline_apply(
         emit = jnp.where((stage == n_stages - 1) & active, y, jnp.zeros_like(y))
         return out_slot, emit
 
-    init = jnp.zeros(mb_shape, microbatches.dtype)
-    if _needs_pvary(init, axis_name):
-        init = _pvary(init, (axis_name,))
+    init = _vma_align(jnp.zeros(mb_shape, microbatches.dtype),
+                      (axis_name, *vary_axes))
     _, emitted = lax.scan(tick, init, jnp.arange(ticks))
     # emitted[t] holds microbatch (t - (S-1)); realign to microbatch order
     out = lax.dynamic_slice_in_dim(emitted, n_stages - 1, m, axis=0)

@@ -6,14 +6,14 @@ Topology (all edges are lock-free SPSC rings — never a shared MPMC):
             --spsc--> Worker_1 --spsc---> Collector
             --spsc--> ...      --spsc--/
 
-As of the graph-runtime refactor this module is a thin facade: the Emitter
-and Collector arbiters, tagged-token ordering, straggler re-issue and the
-EOS protocol all live in reusable machinery in :mod:`.graph`
-(``DispatchVertex`` / ``MergeVertex`` / ``WorkerVertex``), where they are
-shared by every skeleton — ``TaskFarm`` here is simply the seed's original
-API bound to a one-farm :class:`repro.core.graph.Graph`.  Use
-``graph.Farm`` / ``graph.Pipeline`` / ``graph.compose`` directly to build
-composed networks (pipelines of farms, farms with wrap-around edges, ...).
+As of the skeleton-IR redesign this module is a thin facade twice over:
+``TaskFarm`` is the seed's original API bound to a one-farm
+:class:`repro.core.skeleton.Farm` IR node lowered on the threads backend
+(:mod:`.graph`), where the Emitter and Collector arbiters, tagged-token
+ordering, straggler re-issue and the EOS protocol live as reusable
+machinery shared by every skeleton.  New code should build the declarative
+IR directly — ``skeleton.Farm`` / ``Pipeline`` / ``compose`` — and pick a
+runtime with ``lower(skel, backend="threads"|"mesh")``.
 
 Features reproduced from the paper:
   * ``ff_node`` API with ``svc`` / ``svc_init`` / ``svc_end`` (Fig. 2);
@@ -39,7 +39,8 @@ from __future__ import annotations
 
 from typing import Any, List, Optional, Sequence, Type
 
-from .graph import Farm, FarmStats, FnNode, Graph, _SeqNode, ff_node
+from .graph import Graph
+from .skeleton import Farm, FarmStats, FnNode, _SeqNode, ff_node
 from .spsc import SPSCQueue
 
 __all__ = ["ff_node", "FnNode", "TaskFarm", "FarmStats"]

@@ -1,12 +1,20 @@
-"""Composable streaming-network graph runtime — the paper's middle layer.
+"""Thread-graph runtime — the skeleton IR's host backend.
 
-FastFlow (paper Sec. 2-3) is a *layered* design and this module is the layer
-the seed was missing: between the lock-free SPSC ring (``spsc.py``, paper
-Sec. 3.1) and the closed skeletons (farm / pipeline) sits a runtime for
-**arbitrary streaming networks** in which any ``ff_node`` is a vertex, every
-edge is an SPSC ring, and all multi-party coordination is performed by
-*active arbiters* walking their private ring endpoints — never a lock or an
-atomic RMW on the data path.
+FastFlow (paper Sec. 2-3) is a *layered* design: between the lock-free SPSC
+ring (``spsc.py``, paper Sec. 3.1) and the declarative skeletons
+(``skeleton.py``) sits a runtime for **arbitrary streaming networks** in
+which any ``ff_node`` is a vertex, every edge is an SPSC ring, and all
+multi-party coordination is performed by *active arbiters* walking their
+private ring endpoints — never a lock or an atomic RMW on the data path.
+
+As of the skeleton-IR redesign this module is the **threads backend** of
+:func:`repro.core.skeleton.lower`: the declarative ``Pipeline`` / ``Farm``
+/ ``Feedback`` / ``Source`` / ``Stage`` vocabulary lives in
+:mod:`repro.core.skeleton` (pure data), and :func:`build` below wires an IR
+tree into a :class:`Graph` of vertices and rings — PR 1's ``Net._build``
+machinery, now driven by the IR.  The old names (``Net``, ``Pipeline``,
+``Farm``, ``compose``, ``ff_node``, ...) remain importable from here as
+shims for existing callers.
 
 Construct-to-paper map
 ----------------------
@@ -56,78 +64,25 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
 
+from .skeleton import (GO_ON, EmitMany, Farm, FarmStats, Feedback, FnNode,
+                       Pipeline, Skeleton, Source, Stage, _SeqNode,
+                       as_skeleton, compose, ff_node)
 from .spsc import EOS, SPSCQueue
 
 __all__ = [
     "GO_ON", "Token", "FarmStats", "TagSpace",
     "ff_node", "FnNode",
     "Graph", "Vertex", "StageVertex", "DispatchVertex", "WorkerVertex",
-    "MergeVertex",
-    "Net", "Stage", "Source", "Pipeline", "Farm", "compose", "Accelerator",
+    "MergeVertex", "build",
+    "Net", "Stage", "Source", "Pipeline", "Farm", "Feedback", "compose",
+    "Accelerator",
 ]
 
 _EMPTY = SPSCQueue._EMPTY
 _POLL = 0.000_05  # arbiter poll backoff (matches the SPSC blocking helpers)
-
-
-# ---------------------------------------------------------------------------
-# programming model (paper Fig. 2)
-# ---------------------------------------------------------------------------
-class ff_node:
-    """Base class for network entities (paper Fig. 2)."""
-
-    def svc_init(self) -> None:  # noqa: D401
-        """Called once in the entity's own thread before the stream starts."""
-
-    def svc(self, task: Any) -> Any:
-        """Process one task.  Sources receive ``None`` and return the next
-        task (``None`` = end-of-stream); other nodes receive a task and
-        return a result (``GO_ON`` = nothing to emit, keep streaming)."""
-        raise NotImplementedError
-
-    def svc_end(self) -> None:
-        """Called once after EOS has been processed."""
-
-
-class FnNode(ff_node):
-    """Wrap a plain callable as an ``ff_node``."""
-
-    def __init__(self, fn: Callable[[Any], Any]):
-        self._fn = fn
-
-    def svc(self, task: Any) -> Any:
-        return self._fn(task)
-
-
-class _SeqNode(ff_node):
-    """Source node replaying a finite iterable (then EOS)."""
-
-    def __init__(self, items: Iterable[Any]):
-        self._it = iter(items)
-
-    def svc(self, _):
-        try:
-            return next(self._it)
-        except StopIteration:
-            return None
-
-
-class _GoOn:
-    _instance: Optional["_GoOn"] = None
-
-    def __new__(cls) -> "_GoOn":
-        if cls._instance is None:
-            cls._instance = super().__new__(cls)
-        return cls._instance
-
-    def __repr__(self) -> str:  # pragma: no cover - cosmetic
-        return "<GO_ON>"
-
-
-GO_ON = _GoOn()
 
 
 # ---------------------------------------------------------------------------
@@ -139,23 +94,6 @@ class Token:
     payload: Any
     issued_at: float = 0.0
     duplicate: bool = False
-
-
-@dataclass
-class FarmStats:
-    tasks_emitted: int = 0
-    tasks_collected: int = 0
-    duplicates_issued: int = 0
-    duplicates_dropped: int = 0
-    per_worker: Dict[int, int] = field(default_factory=dict)
-    latencies: List[float] = field(default_factory=list)
-    worker_failures: List = field(default_factory=list)
-
-    def p95_latency(self) -> float:
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
 
 
 class TagSpace:
@@ -286,6 +224,10 @@ class StageVertex(Vertex):
                 time.sleep(_POLL)
 
     def _emit(self, out: Any) -> None:
+        if isinstance(out, EmitMany):  # multi-emit (e.g. a reorder flush)
+            for o in out:
+                self._emit(o)
+            return
         if not self.outs:
             self.graph.results.append(out)
         elif self.route == "bcast":
@@ -679,187 +621,63 @@ class Graph:
 
 
 # ---------------------------------------------------------------------------
-# skeleton layer: composable network descriptions
+# threads lowering: IR tree -> vertices + rings
 # ---------------------------------------------------------------------------
-class Net:
-    """A composable description of a streaming sub-network.
+# Back-compat shims: the declarative layer now lives in skeleton.py; the old
+# names keep working for existing callers (PR-1's Net API).
+Net = Skeleton
+_as_net = as_skeleton
 
-    ``_build`` wires the sub-network into a ``Graph`` between an optional
-    inbound ring and (unless terminal) a freshly created outbound ring —
-    this is what makes skeletons close under composition: a ``Farm`` is a
+
+def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
+          terminal: bool) -> Optional[Any]:
+    """Wire a skeleton IR node into ``g`` between an optional inbound ring
+    and (unless terminal) a freshly created outbound ring — the threads
+    backend of :func:`repro.core.skeleton.lower`.
+
+    This is what makes skeletons close under composition: a ``Farm`` is a
     vertex of the enclosing ``Pipeline``, and vice versa."""
-
-    def _build(self, g: Graph, in_ring: Optional[Any],
-               terminal: bool) -> Optional[Any]:
-        raise NotImplementedError
-
-    def to_graph(self, stream: Optional[Iterable[Any]] = None, *,
-                 queue_class: Type = SPSCQueue, capacity: int = 512) -> Graph:
-        g = Graph(queue_class=queue_class, capacity=capacity)
-        net: Net = self if stream is None else Pipeline(Source(stream), self)
-        net._build(g, None, True)
-        return g
-
-    def run(self, stream: Optional[Iterable[Any]] = None, **kw) -> Graph:
-        return self.to_graph(stream, **kw).run()
-
-    def run_and_wait(self, stream: Optional[Iterable[Any]] = None, **kw) -> List[Any]:
-        return self.to_graph(stream, **kw).run_and_wait()
-
-
-def _as_net(x: Any) -> Net:
-    if isinstance(x, Net):
-        return x
-    if isinstance(x, ff_node):
-        return Stage(x)
-    if callable(x):
-        return Stage(FnNode(x))
-    raise TypeError(f"cannot interpret {x!r} as a network stage")
-
-
-class Stage(Net):
-    """A single sequential node (paper Fig. 2) as a one-vertex network."""
-
-    def __init__(self, node: Any, *, name: str = "ff-stage"):
-        self.node = node if isinstance(node, ff_node) else FnNode(node)
-        self.name = name
-
-    def _build(self, g, in_ring, terminal):
-        v = g.add(StageVertex(self.node, name=self.name))
-        if in_ring is not None:
-            v.ins.append(in_ring)
-        if terminal:
-            return None
-        ring = g.channel()
-        v.outs.append(ring)
-        return ring
-
-
-class Source(Net):
-    """A stream source: an ``ff_node`` (``svc(None)`` protocol) or any
-    iterable, replayed then EOS."""
-
-    def __init__(self, items: Any, *, name: str = "ff-source"):
-        self.node = items if isinstance(items, ff_node) else _SeqNode(items)
-        self.name = name
-
-    def _build(self, g, in_ring, terminal):
+    if isinstance(skel, Source):
         assert in_ring is None, "Source cannot have an upstream edge"
-        return Stage(self.node, name=self.name)._build(g, None, terminal)
+        return build(Stage(skel.node, name=skel.name), g, None, terminal)
 
-
-class Pipeline(Net):
-    """Chain sub-networks over SPSC edges (paper Sec. 3.1 pipeline)."""
-
-    def __init__(self, *stages: Any):
-        assert stages, "empty pipeline"
-        self.stages = [_as_net(s) for s in stages]
-
-    def _build(self, g, in_ring, terminal):
+    if isinstance(skel, Pipeline):
         ring = in_ring
-        for s in self.stages[:-1]:
-            ring = s._build(g, ring, False)
-        return self.stages[-1]._build(g, ring, terminal)
+        for s in skel.stages[:-1]:
+            ring = build(s, g, ring, False)
+        return build(skel.stages[-1], g, ring, terminal)
 
+    if isinstance(skel, Feedback):
+        # predicate loop -> tagger + wrap-around farm + reorder (Sec. 5)
+        return build(skel.as_thread_net(), g, in_ring, terminal)
 
-def compose(*stages: Any) -> Pipeline:
-    """``compose(a, b, c)`` == ``Pipeline(a, b, c)`` — functional spelling."""
-    return Pipeline(*stages)
-
-
-class Farm(Net):
-    """The farm skeleton (paper Sec. 3.1, Figs. 1-2) as a composable network.
-
-    Parameters
-    ----------
-    workers: one ``ff_node``/callable shared by all worker threads, or a
-        list with one node per worker.
-    nworkers: worker-pool width (defaults to ``len(workers)`` for a list).
-    emitter: optional ``ff_node``.  Standalone farm (no upstream edge): a
-        *source* (``svc(None)`` generates the stream).  Composed farm (an
-        upstream edge exists): a per-item scheduler/filter.
-    collector: optional ``ff_node`` applied to each collected result
-        (``None`` return filters it).
-    ordered: reorder results by tag — Fig. 1 (right) tagged-token collector.
-    scheduling: ``"rr"`` round-robin | ``"ondemand"`` shortest-queue.
-    speculative / straggler_factor / min_straggler_age: straggler re-issue.
-    feedback: enables the wrap-around (collector → emitter) edge, paper
-        Sec. 5.  Called per result as ``feedback(result) -> (emit, tasks)``:
-        ``tasks`` go back around the loop, ``emit`` (unless ``None``) leaves
-        the loop downstream.  Termination is by loop quiescence: upstream
-        EOS ∧ every token retired ∧ wrap-around ring drained.
-    """
-
-    def __init__(
-        self,
-        workers: Any,
-        nworkers: Optional[int] = None,
-        *,
-        emitter: Optional[ff_node] = None,
-        collector: Optional[ff_node] = None,
-        ordered: bool = False,
-        scheduling: str = "rr",
-        speculative: bool = False,
-        straggler_factor: float = 4.0,
-        min_straggler_age: float = 0.05,
-        feedback: Optional[Callable[[Any], Tuple[Any, Iterable[Any]]]] = None,
-        feedback_capacity: int = 1 << 16,
-        queue_class: Optional[Type] = None,
-        capacity: Optional[int] = None,
-        stats: Optional[FarmStats] = None,
-    ):
-        if isinstance(workers, (list, tuple)):
-            nodes = [w if isinstance(w, ff_node) else FnNode(w) for w in workers]
-            nworkers = len(nodes) if nworkers is None else nworkers
-        else:
-            node = workers if isinstance(workers, ff_node) else FnNode(workers)
-            nworkers = 1 if nworkers is None else nworkers
-            nodes = [node] * nworkers
-        assert nworkers >= 1 and len(nodes) == nworkers
-        assert not (ordered and feedback is not None), \
-            "ordering across a wrap-around edge is undefined (tags are " \
-            "re-assigned per loop trip) — use ordered=False with feedback"
-        self.worker_nodes = nodes
-        self.nworkers = nworkers
-        self.emitter = emitter
-        self.collector = collector
-        self.ordered = ordered
-        self.scheduling = scheduling
-        self.speculative = speculative
-        self.straggler_factor = straggler_factor
-        self.min_straggler_age = min_straggler_age
-        self.feedback = feedback
-        self.feedback_capacity = feedback_capacity
-        self.queue_class = queue_class
-        self.capacity = capacity
-        self.stats = stats if stats is not None else FarmStats()
-
-    def _build(self, g, in_ring, terminal):
-        qc = self.queue_class or g.queue_class
-        cap = self.capacity or g.capacity
-        ts = TagSpace(self.stats)
-        loop_ring = qc(self.feedback_capacity) if self.feedback is not None else None
+    if isinstance(skel, Farm):
+        qc = skel.queue_class or g.queue_class
+        cap = skel.capacity or g.capacity
+        ts = TagSpace(skel.stats)
+        loop_ring = (qc(skel.feedback_capacity)
+                     if skel.feedback is not None else None)
 
         disp = g.add(DispatchVertex(
-            ts, self.emitter,
-            scheduling=self.scheduling, speculative=self.speculative,
-            straggler_factor=self.straggler_factor,
-            min_straggler_age=self.min_straggler_age,
+            ts, skel.emitter,
+            scheduling=skel.scheduling, speculative=skel.speculative,
+            straggler_factor=skel.straggler_factor,
+            min_straggler_age=skel.min_straggler_age,
             loop_ring=loop_ring,
         ))
         if in_ring is not None:
             disp.ins.append(in_ring)
         else:
-            assert self.emitter is not None, \
+            assert skel.emitter is not None, \
                 "a standalone farm needs an emitter (or compose it after a Source)"
 
         merge = g.add(MergeVertex(
-            ts, self.collector, ordered=self.ordered,
-            loop_ring=loop_ring, feedback=self.feedback,
+            ts, skel.collector, ordered=skel.ordered,
+            loop_ring=loop_ring, feedback=skel.feedback,
         ))
-        for i, node in enumerate(self.worker_nodes):
+        for i, node in enumerate(skel.worker_nodes):
             w = g.add(WorkerVertex(node, i, ts.stats,
-                                   survivable=self.speculative,
+                                   survivable=skel.speculative,
                                    name=f"ff-worker-{i}"))
             g.connect(disp, w, capacity=cap, queue_class=qc)
             g.connect(w, merge, capacity=cap, queue_class=qc)
@@ -868,6 +686,18 @@ class Farm(Net):
         ring = g.channel()
         merge.outs.append(ring)
         return ring
+
+    if isinstance(skel, Stage):
+        v = g.add(StageVertex(skel.node, name=skel.name))
+        if in_ring is not None:
+            v.ins.append(in_ring)
+        if terminal:
+            return None
+        ring = g.channel()
+        v.outs.append(ring)
+        return ring
+
+    raise TypeError(f"cannot lower {skel!r} to the thread graph")
 
 
 class Accelerator:
@@ -888,7 +718,7 @@ class Accelerator:
                  capacity: int = 512):
         self._g = Graph(queue_class=queue_class, capacity=capacity)
         self._in = self._g.channel()
-        _as_net(net)._build(self._g, self._in, True)
+        build(as_skeleton(net), self._g, self._in, True)
         self._g.run()
         self._closed = False
 

@@ -2,9 +2,10 @@
 
 The paper closes by proposing FastFlow as "a fast macro data-flow executor
 (actually wrapping around the order preserving farm) ... including dynamic
-programming".  This module is that executor, now expressed directly on the
-graph runtime's wrap-around machinery (:class:`repro.core.graph.Farm` with
-``feedback=``): completed-task events flow from the merge arbiter back to
+programming".  This module is that executor, expressed as a facade over the
+skeleton IR's wrap-around machinery (:class:`repro.core.skeleton.Farm` with
+``feedback=``, lowered on the threads backend): completed-task events flow
+from the merge arbiter back to
 the dispatch arbiter over the wrap-around SPSC ring — i.e. the network is
 *cyclic*, exercising the paper's claim that arbitrated SPSC composition
 supports arbitrary streaming graphs, loops included.
@@ -26,7 +27,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Sequence, Tuple
 
-from .graph import Farm, FnNode, Pipeline, Source
+from .skeleton import Farm, FnNode, Pipeline, Source
 
 __all__ = ["MDFTask", "MDFExecutor"]
 

@@ -1,0 +1,676 @@
+"""Backend-neutral skeleton IR — one vocabulary, two runtimes.
+
+FastFlow's central claim (paper Sec. 2, tutorial TR-12-04) is that one small
+skeleton vocabulary — pipeline, farm, feedback — covers every streaming
+application while the machinery underneath stays swappable.  This module is
+that vocabulary as *pure data*: declarative :class:`Stage`, :class:`Source`,
+:class:`Pipeline`, :class:`Farm` and :class:`Feedback` nodes, composable
+with ``compose``/``>>`` (the paper's ∘), carrying ``ordered=``,
+``nworkers=`` and ``grain=`` attributes, and *no* execution state.
+
+Execution is a separate step, :func:`lower`:
+
+``lower(skel, backend="threads")``
+    produces a :class:`ThreadProgram` over today's thread/SPSC-ring graph
+    runtime — PR 1's ``Net._build`` machinery, now driven by the IR (see
+    :func:`repro.core.graph.build`).  Ordered-stream semantics come from the
+    tagged-token collector.
+
+``lower(skel, backend="mesh")``
+    produces a :class:`MeshProgram`: **one** ``shard_map`` program over a
+    2-D ``(skel_stage, skel_worker)`` mesh that nests
+    ``dpipeline.pipeline_apply`` (stage axis) over ``dfarm.farm_map``
+    (worker axis), so ``Pipeline(Farm(f), Farm(g))`` compiles whole — no
+    host SPSC hop between f and g.  Ordering is structural: the farm's
+    ``(dest, pos)`` tags and the pipeline's microbatch realignment preserve
+    item order by construction.
+
+Both lowerings of the same skeleton produce identical ordered outputs
+(``tests/test_skeleton.py`` proves it property-style); the thread backend
+additionally supports host-only features (``GO_ON`` filtering, emitter /
+collector nodes, speculative re-issue, arbitrary ``feedback=`` routing),
+which the mesh lowering rejects with a :class:`LoweringError` rather than
+silently approximating.
+
+The programming-model primitives (``ff_node``, ``FnNode``, ``GO_ON``) live
+here too: they are the *node* vocabulary both backends share (the mesh
+backend unwraps ``FnNode`` to its callable and requires it to be
+jax-traceable and batch-polymorphic — it is applied to ``(rows, d)``
+arrays, which for elementwise arithmetic is identical to the scalar form).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
+
+__all__ = [
+    "GO_ON", "EmitMany", "ff_node", "FnNode", "FarmStats",
+    "Skeleton", "Stage", "Source", "Pipeline", "Farm", "Feedback",
+    "compose", "as_skeleton",
+    "LoweringError", "lower", "BACKENDS", "ThreadProgram", "MeshProgram",
+]
+
+STAGE_AXIS = "skel_stage"
+WORKER_AXIS = "skel_worker"
+
+
+# ---------------------------------------------------------------------------
+# programming model (paper Fig. 2) — shared by every backend
+# ---------------------------------------------------------------------------
+class ff_node:
+    """Base class for network entities (paper Fig. 2)."""
+
+    def svc_init(self) -> None:  # noqa: D401
+        """Called once in the entity's own thread before the stream starts."""
+
+    def svc(self, task: Any) -> Any:
+        """Process one task.  Sources receive ``None`` and return the next
+        task (``None`` = end-of-stream); other nodes receive a task and
+        return a result (``GO_ON`` = nothing to emit, keep streaming)."""
+        raise NotImplementedError
+
+    def svc_end(self) -> None:
+        """Called once after EOS has been processed."""
+
+
+class FnNode(ff_node):
+    """Wrap a plain callable as an ``ff_node``."""
+
+    def __init__(self, fn: Callable[[Any], Any]):
+        self._fn = fn
+
+    def svc(self, task: Any) -> Any:
+        return self._fn(task)
+
+
+class _SeqNode(ff_node):
+    """Source node replaying a finite iterable (then EOS)."""
+
+    def __init__(self, items: Iterable[Any]):
+        self._it = iter(items)
+
+    def svc(self, _):
+        try:
+            return next(self._it)
+        except StopIteration:
+            return None
+
+
+class _GoOn:
+    _instance: Optional["_GoOn"] = None
+
+    def __new__(cls) -> "_GoOn":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return "<GO_ON>"
+
+
+GO_ON = _GoOn()
+
+
+class EmitMany(list):
+    """Return type for a *Stage* node's ``svc`` when one input produces
+    several outputs: ``return EmitMany([a, b])`` emits ``a`` then ``b``
+    downstream (an empty ``EmitMany`` emits nothing, like ``GO_ON``).
+    Plain lists stay ordinary payloads — multi-emit is opt-in by type.
+    Only ``StageVertex`` flattens it (the reorder stage's flush is the
+    canonical use); farm workers and collectors pass it through as an
+    ordinary payload, because their tokens are 1:1 by tag."""
+
+
+@dataclass
+class FarmStats:
+    """Thread-backend farm telemetry (dispatch/merge arbiters fill it in)."""
+
+    tasks_emitted: int = 0
+    tasks_collected: int = 0
+    duplicates_issued: int = 0
+    duplicates_dropped: int = 0
+    per_worker: Dict[int, int] = field(default_factory=dict)
+    latencies: List[float] = field(default_factory=list)
+    worker_failures: List = field(default_factory=list)
+
+    def p95_latency(self) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+
+def _as_node(x: Any) -> ff_node:
+    return x if isinstance(x, ff_node) else FnNode(x)
+
+
+# ---------------------------------------------------------------------------
+# the IR: declarative skeleton nodes (pure data)
+# ---------------------------------------------------------------------------
+class Skeleton:
+    """A declarative description of a streaming network.
+
+    Skeletons are pure data: they carry nodes and attributes, never threads
+    or device buffers.  ``a >> b`` (or ``compose(a, b)``) chains skeletons
+    into a :class:`Pipeline` — the paper's ∘.  Execution goes through
+    :func:`lower`; the ``to_graph``/``run``/``run_and_wait`` methods below
+    are thread-backend conveniences that preserve PR 1's ``Net`` API
+    (``repro.core.graph.Net`` is now an alias of this class).
+    """
+
+    def __rshift__(self, other: Any) -> "Pipeline":
+        return Pipeline(self, other)
+
+    def __rrshift__(self, other: Any) -> "Pipeline":
+        return Pipeline(other, self)
+
+    # -- thread-backend conveniences (the PR-1 Net surface) -----------------
+    def to_graph(self, stream: Optional[Iterable[Any]] = None, *,
+                 queue_class: Optional[Type] = None, capacity: int = 512):
+        return lower(self, "threads", queue_class=queue_class,
+                     capacity=capacity).to_graph(stream)
+
+    def run(self, stream: Optional[Iterable[Any]] = None, **kw):
+        return self.to_graph(stream, **kw).run()
+
+    def run_and_wait(self, stream: Optional[Iterable[Any]] = None,
+                     **kw) -> List[Any]:
+        return self.to_graph(stream, **kw).run_and_wait()
+
+
+def as_skeleton(x: Any) -> Skeleton:
+    """Coerce a skeleton / ``ff_node`` / plain callable into IR."""
+    if isinstance(x, Skeleton):
+        return x
+    if isinstance(x, ff_node) or callable(x):
+        return Stage(x)
+    raise TypeError(f"cannot interpret {x!r} as a network stage")
+
+
+class Stage(Skeleton):
+    """A single sequential node (paper Fig. 2) as a one-vertex network."""
+
+    def __init__(self, node: Any, *, name: str = "ff-stage",
+                 grain: Optional[int] = None):
+        self.node = _as_node(node)
+        self.name = name
+        self.grain = grain
+
+
+class Source(Skeleton):
+    """A stream source: an ``ff_node`` (``svc(None)`` protocol) or any
+    iterable, replayed then EOS."""
+
+    def __init__(self, items: Any, *, name: str = "ff-source"):
+        self.node = items if isinstance(items, ff_node) else _SeqNode(items)
+        self.name = name
+
+
+class Pipeline(Skeleton):
+    """Chain sub-networks over streaming edges (paper Sec. 3.1 pipeline).
+
+    Nested pipelines are flattened, so ``Pipeline(a, Pipeline(b, c))`` and
+    ``compose(a, b, c)`` are the same IR — handy for the mesh lowering,
+    which plans over the flat stage list."""
+
+    def __init__(self, *stages: Any):
+        assert stages, "empty pipeline"
+        flat: List[Skeleton] = []
+        for s in stages:
+            s = as_skeleton(s)
+            flat.extend(s.stages if isinstance(s, Pipeline) else [s])
+        self.stages = flat
+
+
+def compose(*stages: Any) -> Pipeline:
+    """``compose(a, b, c)`` == ``Pipeline(a, b, c)`` — functional spelling."""
+    return Pipeline(*stages)
+
+
+class Farm(Skeleton):
+    """The farm skeleton (paper Sec. 3.1, Figs. 1-2), backend-neutral.
+
+    Parameters
+    ----------
+    workers: one ``ff_node``/callable shared by all workers, or a list with
+        one node per worker (thread backend only — the mesh backend needs a
+        single jax-traceable function).
+    nworkers: worker-pool width (defaults to ``len(workers)`` for a list).
+        On the mesh backend actual parallelism is the worker-axis size.
+    emitter / collector: optional ``ff_node``s (thread backend only).
+    ordered: reorder results by tag — Fig. 1 (right) tagged-token collector.
+        The mesh lowering is always order-preserving (its ``(dest, pos)``
+        routing tags are the same construction).
+    grain: items per microbatch hint — the mesh lowering uses it as the
+        ``pipeline_apply`` microbatch size; the fusion policy (ROADMAP) will
+        use it on the thread side.
+    scheduling: ``"rr"`` round-robin | ``"ondemand"`` shortest-queue
+        (thread backend; the mesh emitter policy is round-robin by global
+        item index — see ``dfarm.roundrobin_dest``).
+    speculative / straggler_factor / min_straggler_age: straggler re-issue
+        (thread backend).
+    feedback: wrap-around (collector → emitter) edge, paper Sec. 5, called
+        per result as ``feedback(result) -> (emit, tasks)``.  This is the
+        thread backend's fully general routing protocol; for a
+        backend-neutral loop use :class:`Feedback`.
+    """
+
+    def __init__(
+        self,
+        workers: Any,
+        nworkers: Optional[int] = None,
+        *,
+        emitter: Optional[ff_node] = None,
+        collector: Optional[ff_node] = None,
+        ordered: bool = False,
+        grain: Optional[int] = None,
+        scheduling: str = "rr",
+        speculative: bool = False,
+        straggler_factor: float = 4.0,
+        min_straggler_age: float = 0.05,
+        feedback: Optional[Callable[[Any], Tuple[Any, Iterable[Any]]]] = None,
+        feedback_capacity: int = 1 << 16,
+        queue_class: Optional[Type] = None,
+        capacity: Optional[int] = None,
+        stats: Optional[FarmStats] = None,
+    ):
+        if isinstance(workers, (list, tuple)):
+            nodes = [_as_node(w) for w in workers]
+            nworkers = len(nodes) if nworkers is None else nworkers
+        else:
+            node = _as_node(workers)
+            nworkers = 1 if nworkers is None else nworkers
+            nodes = [node] * nworkers
+        assert nworkers >= 1 and len(nodes) == nworkers
+        assert scheduling in ("rr", "ondemand")
+        assert not (ordered and feedback is not None), \
+            "ordering across a wrap-around edge is undefined (tags are " \
+            "re-assigned per loop trip) — use ordered=False with feedback"
+        self.worker_nodes = nodes
+        self.nworkers = nworkers
+        self.emitter = emitter
+        self.collector = collector
+        self.ordered = ordered
+        self.grain = grain
+        self.scheduling = scheduling
+        self.speculative = speculative
+        self.straggler_factor = straggler_factor
+        self.min_straggler_age = min_straggler_age
+        self.feedback = feedback
+        self.feedback_capacity = feedback_capacity
+        self.queue_class = queue_class
+        self.capacity = capacity
+        self.stats = stats if stats is not None else FarmStats()
+
+
+class _ReorderNode(ff_node):
+    """Buffer ``(i, x)`` pairs and release ``x``s in index order."""
+
+    def __init__(self):
+        self._buf: Dict[int, Any] = {}
+        self._next = 0
+
+    def svc(self, t):
+        idx, value = t
+        self._buf[idx] = value
+        out = EmitMany()
+        while self._next in self._buf:
+            out.append(self._buf.pop(self._next))
+            self._next += 1
+        return out if out else GO_ON
+
+
+class Feedback(Skeleton):
+    """Backend-neutral wrap-around loop: re-apply ``worker`` while
+    ``loop_while(result)`` holds, emit the first result for which it is
+    false (do-while: every item is serviced at least once).  Unlike the raw
+    ``Farm(feedback=route)`` protocol, ``Feedback`` preserves input order
+    on both backends.
+
+    Thread lowering: a :class:`Farm` whose ``feedback=`` route sends
+    still-looping results back over the wrap-around SPSC ring (paper
+    Sec. 5), bracketed by an index tagger and a reorder stage; termination
+    by loop quiescence.  Mesh lowering: a masked ``lax.while_loop`` between
+    the farm's dispatch and ordered combine (``dfarm.farm_until``) — the
+    wrap-around ring becomes the loop carry.
+
+    ``loop_while`` must be jax-traceable for the mesh backend (on the
+    thread backend any callable returning truthy works).  ``max_trips``
+    bounds the trip count on BOTH backends (``None`` = loop until the
+    predicate releases the item): a still-looping result is emitted as-is
+    once it has been serviced ``max_trips`` times.
+    """
+
+    def __init__(self, worker: Any, loop_while: Callable[[Any], Any], *,
+                 nworkers: int = 1, max_trips: Optional[int] = None,
+                 scheduling: str = "rr", grain: Optional[int] = None,
+                 name: str = "ff-feedback"):
+        self.node = _as_node(worker)
+        self.loop_while = loop_while
+        self.nworkers = nworkers
+        self.max_trips = max_trips
+        self.scheduling = scheduling
+        self.grain = grain
+        self.name = name
+
+    def as_thread_net(self) -> "Pipeline":
+        """The predicate loop as a wrap-around farm (thread backend).
+
+        The wrap-around ring emits in *completion* order (loop tags are
+        re-assigned per trip), but the :class:`Feedback` contract — like the
+        mesh lowering, whose ``(dest, pos)`` tags survive the while_loop —
+        is input order.  So items carry a stream index and a trip counter
+        through the loop (the counter enforces ``max_trips``, mirroring the
+        mesh ``while_loop`` bound) and a reorder stage restores order
+        downstream."""
+        pred = self.loop_while
+        node = self.node
+        cap = self.max_trips
+        counter = iter(range(1 << 62))
+
+        def tag(x):
+            return next(counter), 0, x
+
+        def work(task):
+            idx, trips, x = task
+            return idx, trips + 1, node.svc(x)
+
+        def route(result):
+            idx, trips, value = result
+            if bool(pred(value)) and (cap is None or trips < cap):
+                return None, [result]       # back around the loop
+            return (idx, value), []         # leaves the loop
+
+        return Pipeline(
+            Stage(tag, name=f"{self.name}-tagger"),
+            Farm(work, self.nworkers, feedback=route,
+                 scheduling=self.scheduling),
+            Stage(_ReorderNode(), name=f"{self.name}-reorder"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# lowering: backend registry + programs
+# ---------------------------------------------------------------------------
+class LoweringError(ValueError):
+    """A skeleton uses a feature its target backend cannot express."""
+
+
+BACKENDS: Dict[str, Type] = {}
+
+
+def lower(skel: Any, backend: str = "threads", **opts: Any):
+    """Lower a skeleton to an executable program on ``backend``.
+
+    Programs are callables: ``lower(skel, b)(items)`` runs the finite
+    stream ``items`` through the network and returns the output list.
+    Backends are a registry (``BACKENDS``) so scheduling policies and
+    fused runtimes can plug in without touching the IR.
+    """
+    skel = as_skeleton(skel)
+    try:
+        cls = BACKENDS[backend]
+    except KeyError:
+        raise LoweringError(
+            f"unknown backend {backend!r} (have {sorted(BACKENDS)})") from None
+    return cls(skel, **opts)
+
+
+class ThreadProgram:
+    """Threads lowering: the skeleton wired onto the PR-1 graph runtime
+    (one thread per vertex, lock-free SPSC rings for every edge)."""
+
+    backend = "threads"
+
+    def __init__(self, skeleton: Skeleton, *,
+                 queue_class: Optional[Type] = None, capacity: int = 512):
+        self.skeleton = skeleton
+        self.queue_class = queue_class
+        self.capacity = capacity
+
+    def to_graph(self, stream: Optional[Iterable[Any]] = None):
+        from . import graph  # the threads backend (PR-1 vertex machinery)
+        from .spsc import SPSCQueue
+        g = graph.Graph(queue_class=self.queue_class or SPSCQueue,
+                        capacity=self.capacity)
+        skel = (self.skeleton if stream is None
+                else Pipeline(Source(stream), self.skeleton))
+        graph.build(skel, g, None, True)
+        return g
+
+    def __call__(self, items: Iterable[Any]) -> List[Any]:
+        return self.to_graph(list(items)).run_and_wait()
+
+
+BACKENDS["threads"] = ThreadProgram
+
+
+# ---------------------------------------------------------------------------
+# mesh lowering: one shard_map program for the whole skeleton
+# ---------------------------------------------------------------------------
+@dataclass
+class _MeshStage:
+    # NOTE: no per-stage worker count — mesh parallelism is always the
+    # negotiated worker-axis size (see the Farm docstring)
+    kind: str                                  # "map" | "farm" | "feedback"
+    fn: Callable
+    loop_while: Optional[Callable] = None
+    max_trips: Optional[int] = None
+
+
+def _jax_callable(node: ff_node) -> Callable:
+    """The jax-traceable function behind a node (FnNode unwraps)."""
+    return node._fn if isinstance(node, FnNode) else node.svc
+
+
+def _mesh_plan(skel: Skeleton) -> List[_MeshStage]:
+    """Flatten a skeleton into the mesh backend's stage list, rejecting
+    host-only features instead of silently approximating them."""
+    if isinstance(skel, Pipeline):
+        return [ms for s in skel.stages for ms in _mesh_plan(s)]
+    if isinstance(skel, Stage):
+        return [_MeshStage("map", _jax_callable(skel.node))]
+    if isinstance(skel, Feedback):
+        return [_MeshStage("feedback", _jax_callable(skel.node),
+                           loop_while=skel.loop_while,
+                           max_trips=skel.max_trips)]
+    if isinstance(skel, Farm):
+        if skel.feedback is not None:
+            raise LoweringError(
+                "Farm(feedback=route) is the thread backend's general "
+                "routing protocol; use Feedback(worker, loop_while) for a "
+                "backend-neutral wrap-around loop")
+        if skel.emitter is not None or skel.collector is not None:
+            raise LoweringError(
+                "emitter/collector nodes are host-side arbiters; the mesh "
+                "farm's dispatch/combine replace them")
+        if len({id(n) for n in skel.worker_nodes}) != 1:
+            raise LoweringError(
+                "mesh farms are SPMD: all workers must share one function")
+        return [_MeshStage("farm", _jax_callable(skel.worker_nodes[0]))]
+    if isinstance(skel, Source):
+        raise LoweringError(
+            "a mesh program takes its stream as the call argument; drop "
+            "the Source stage")
+    raise LoweringError(f"cannot lower {skel!r} to the mesh backend")
+
+
+def _skeleton_grain(skel: Skeleton) -> Optional[int]:
+    if isinstance(skel, Pipeline):
+        for s in skel.stages:
+            g = _skeleton_grain(s)
+            if g:
+                return g
+        return None
+    return getattr(skel, "grain", None)
+
+
+class MeshProgram:
+    """Mesh lowering: the whole skeleton as ONE ``shard_map`` program.
+
+    A 2-D ``(skel_stage, skel_worker)`` mesh is negotiated from the device
+    count (``dpipeline.negotiate_stage_axis``): with enough devices each
+    pipeline stage owns a row of workers and the program is
+    ``pipeline_apply`` (stage axis, microbatch streaming over SPSC
+    collective-permute edges) of ``farm_map`` (worker axis, all-to-all
+    dispatch + ordered combine); with fewer devices the stage chain runs
+    sequentially *inside the same program* — either way there is exactly
+    one compiled ``shard_map`` and no host hop between stages.
+
+    Items are packed host-side into a ``(rows, d)`` array (scalars become
+    ``d=1``), padded to a per-device row bucket (power of two, so repeated
+    calls with nearby sizes reuse the compiled program), and unpacked in
+    order on the way out — ordering is preserved end to end by the farm's
+    ``(dest, pos)`` tags and the pipeline's microbatch realignment.
+    """
+
+    backend = "mesh"
+
+    def __init__(self, skeleton: Skeleton, *, devices: Optional[int] = None,
+                 grain: Optional[int] = None, capacity: Optional[int] = None,
+                 block: int = 64, check_vma: Optional[bool] = None):
+        import jax
+        from . import dpipeline
+
+        self.skeleton = skeleton
+        self.stages = _mesh_plan(skeleton)
+        assert self.stages, "empty skeleton"
+        self.grain = grain if grain is not None else _skeleton_grain(skeleton)
+        self.capacity = capacity
+        self.block = block
+        self.check_vma = check_vma
+        ndev = len(jax.devices()) if devices is None else devices
+        self.n_stage, self.n_worker = dpipeline.negotiate_stage_axis(
+            len(self.stages), ndev)
+        from .. import compat
+        self.mesh = compat.make_mesh((self.n_stage, self.n_worker),
+                                     (STAGE_AXIS, WORKER_AXIS))
+        self._programs: Dict[Tuple[int, int, str], Callable] = {}
+
+    # -- host-side packing ---------------------------------------------------
+    def _bucket_rows(self, n: int) -> int:
+        """Per-device row count: enough for ``n`` items over the worker
+        axis, floored at ``block`` and rounded to a power of two (bounds
+        recompiles), then aligned to the microbatch grain."""
+        rows = max(-(-n // self.n_worker), 1, self.block)
+        rows = 1 << (rows - 1).bit_length()
+        if self.grain:
+            rows = self.grain * (-(-rows // self.grain))
+        return rows
+
+    def __call__(self, items: Iterable[Any]) -> List[Any]:
+        import numpy as np
+
+        xs = list(items)
+        if not xs:
+            return []
+        arr = np.asarray(xs)
+        if arr.dtype.kind == "f":
+            arr = arr.astype(np.float32)
+        elif arr.dtype.kind in "iub":
+            cast = arr.astype(np.int32)
+            if not np.array_equal(cast, arr):
+                raise LoweringError(
+                    "integer payloads exceed int32 (the mesh compute "
+                    "dtype); the threads backend computes exact Python "
+                    "ints — refusing to silently diverge")
+            arr = cast
+        else:
+            raise LoweringError(
+                f"mesh payloads must be numeric, got dtype {arr.dtype}")
+        squeeze = arr.ndim == 1
+        if squeeze:
+            arr = arr[:, None]
+        if arr.ndim != 2:
+            raise LoweringError("mesh payloads must be scalars or 1-D items")
+        n, d = arr.shape
+        rows = self._bucket_rows(n)
+        # last column is the validity flag: bucket-padding rows carry 0 so
+        # they can never gate a feedback while_loop (see dfarm.farm_until)
+        padded = np.zeros((self.n_worker * rows, d + 1), arr.dtype)
+        padded[:n, :d] = arr
+        padded[:n, d] = 1
+        out = np.asarray(self._program(rows, d, str(arr.dtype))(padded))
+        out = out[:n, :d]
+        if squeeze:
+            return [v.item() for v in out[:, 0]]
+        return [row.tolist() for row in out]
+
+    # -- the single shard_map program ---------------------------------------
+    def _program(self, rows: int, d: int, dtype: str) -> Callable:
+        key = (rows, d, dtype)
+        if key in self._programs:
+            return self._programs[key]
+
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+        from jax.sharding import PartitionSpec as P
+
+        from .. import compat
+        from . import dfarm, dpipeline
+
+        stages, W = self.stages, self.n_worker
+        pipelined = self.n_stage > 1        # one stage per mesh row
+        check_vma = self.check_vma
+        if check_vma is None and compat.WHILE_NEEDS_UNCHECKED_REP \
+                and any(st.kind == "feedback" for st in stages):
+            check_vma = False               # see compat.WHILE_NEEDS_UNCHECKED_REP
+
+        def apply_stage(st: _MeshStage, xf):
+            # xf carries the payload plus the validity-flag column; stages
+            # compute on the payload, the flag rides along untouched (the
+            # farm's ordered combine returns rows to their origin, so the
+            # resident flag stays aligned)
+            x, flag = xf[:, :-1], xf[:, -1:]
+            k = x.shape[0]
+            if st.kind == "map":
+                y = st.fn(x)
+            else:
+                dest = dfarm.roundrobin_dest(k, WORKER_AXIS)
+                need = -(-k // W)   # max bucket fill under round-robin dest
+                cap = self.capacity or need + 1
+                if cap < need:
+                    raise LoweringError(
+                        f"capacity={cap} would drop items: round-robin "
+                        f"dispatch of {k} rows over {W} workers needs "
+                        f"≥ {need} slots per (source, worker) pair")
+                if st.kind == "farm":
+                    y = dfarm.farm_map(st.fn, x, dest, WORKER_AXIS, cap)
+                else:
+                    y = dfarm.farm_until(st.fn, st.loop_while, x, dest,
+                                         WORKER_AXIS, cap, valid=flag,
+                                         max_trips=st.max_trips)
+            return jnp.concatenate([y, flag], axis=1)
+
+        def body(x):                 # (rows, d+1) per worker column
+            if not pipelined:
+                for st in stages:
+                    x = apply_stage(st, x)
+                return x
+            mb = self.grain or rows
+            mbs = x.reshape(rows // mb, mb, d + 1)
+
+            def stage_fn(_, v):
+                # branchless stage dispatch: every row computes all stages'
+                # collectives in the same order (SPMD-safe), select_n keeps
+                # this row's own stage — virtualisation of Fig. 1's
+                # "one entity per stage" onto whatever mesh exists.
+                cases = [compat.vma_align(apply_stage(st, v),
+                                          (STAGE_AXIS, WORKER_AXIS))
+                         for st in stages]
+                return lax.select_n(lax.axis_index(STAGE_AXIS), *cases)
+
+            out = dpipeline.pipeline_apply(stage_fn, None, mbs,
+                                           axis_name=STAGE_AXIS,
+                                           vary_axes=(WORKER_AXIS,))
+            return out.reshape(rows, d + 1)
+
+        fn = jax.jit(compat.shard_map(
+            body, mesh=self.mesh, in_specs=(P(WORKER_AXIS),),
+            out_specs=P(WORKER_AXIS), check_vma=check_vma))
+        self._programs[key] = fn
+        return fn
+
+
+BACKENDS["mesh"] = MeshProgram

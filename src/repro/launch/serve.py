@@ -1,4 +1,6 @@
-"""Serving driver — continuous batching as the order-preserving farm.
+"""Serving driver — continuous batching as the order-preserving farm,
+running ON the skeleton graph (``Source(requests) ∘ Farm(decode_step,
+feedback=still_generating)``).
 
 The mapping from paper Sec. 3.1 to an inference engine:
 
@@ -12,6 +14,17 @@ The mapping from paper Sec. 3.1 to an inference engine:
               and emits results **in tag order** (the reorder buffer of the
               order-preserving farm).
 
+Since the skeleton-IR redesign, ``run()`` no longer drives a hand-rolled
+while loop: it lowers ``compose(Source(submitted_requests),
+Farm(decode_step, feedback=still_generating))`` to the thread graph.
+Requests stream through the farm's dispatch arbiter; each *decode tick*
+token circulates the wrap-around (collector → emitter) SPSC ring while any
+admitted sequence is still generating, and the loop-quiescence protocol —
+upstream EOS ∧ all tokens retired ∧ wrap-around ring drained — is exactly
+the engine's old termination condition, now provided by the runtime.  One
+tick = one jitted decode step advancing the whole continuous batch, so the
+batching behaviour (and ``steps_run`` accounting) is unchanged.
+
 Requests are admitted into recycled slots mid-stream; per-slot ``start_pos``
 masks each request's attention to its own KV span.  Prompt ingestion is
 token-by-token (one decode step per prompt token), which keeps one jitted
@@ -23,6 +36,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -31,11 +45,14 @@ import numpy as np
 
 from ..configs import ARCHS
 from ..core.allocator import PagePool
+from ..core.skeleton import Farm, Source, compose, lower
 from ..core.spsc import SPSCQueue
 from ..models import decode_step as model_decode, init_cache, init_params
 from ..models.config import ModelConfig
 
 __all__ = ["Request", "ServeEngine"]
+
+_TICK = object()  # the decode-tick token circulating the wrap-around ring
 
 
 @dataclasses.dataclass
@@ -64,6 +81,7 @@ class ServeEngine:
         # SPMC pool: slots are the pages (admitter allocs, collector frees)
         self.pool = PagePool(max_batch, nfreers=1)
         self.in_q = SPSCQueue(1024)
+        self._pending: deque = deque()             # admitted-to-graph queue
         self.active: Dict[int, Request] = {}       # slot -> request
         self.done: Dict[int, Request] = {}         # tag -> finished request
         self.emit_next = 0
@@ -81,9 +99,12 @@ class ServeEngine:
 
     def _admit(self) -> None:
         while self.pool.available() or self.pool.drain():
-            nxt = self.in_q.pop()
-            if nxt is SPSCQueue._EMPTY:
-                return
+            if self._pending:                      # streamed in via the graph
+                nxt = self._pending.popleft()
+            else:
+                nxt = self.in_q.pop()
+                if nxt is SPSCQueue._EMPTY:
+                    return
             slot = self.pool.alloc()
             nxt.tag = self.tag_counter
             self.tag_counter += 1
@@ -152,11 +173,70 @@ class ServeEngine:
             self.results.append(self.done.pop(self.emit_next))
             self.emit_next += 1
 
+    def _drain_submitted(self) -> List[Request]:
+        """Everything submitted so far, in submission order (the stream the
+        serving graph's Source replays)."""
+        reqs: List[Request] = []
+        while True:
+            r = self.in_q.pop()
+            if r is SPSCQueue._EMPTY:
+                return reqs
+            reqs.append(r)
+
     def run(self, *, max_steps: int = 10_000) -> List[Request]:
-        while (len(self.active) or len(self.in_q) or self.done) and \
-                self.cache_len < self.max_len and max_steps:
-            self.step()
-            max_steps -= 1
+        """Serve everything submitted so far, by running the serving graph
+
+            Source(requests) ∘ Farm(decode_step, feedback=still_generating)
+
+        to loop quiescence.  Request tasks flow from the Source through the
+        farm's dispatch arbiter into the single decode worker (which owns
+        params/cache — SPSC discipline makes the shared state race-free);
+        the worker admits them next tick.  A ``_TICK`` token circulates the
+        wrap-around ring while anything is still generating; each pass runs
+        one jitted decode step over the whole continuous batch.  Results
+        are emitted in tag order by the engine's reorder buffer, exactly as
+        before — only the driver loop moved into the runtime.  Requests
+        submitted concurrently while ticks are in flight are still served
+        (``_admit`` and the ``more`` check fall through to ``in_q``); a
+        run() entered with an empty queue returns immediately, as the old
+        while-loop did."""
+        budget = [max_steps]
+
+        def decode_step(task):
+            if task is not _TICK:
+                self._pending.append(task)         # admitted on the next tick
+                return ("enq",)
+            self._admit()
+            if self.active and self.cache_len < self.max_len and budget[0]:
+                budget[0] -= 1
+                self.step()
+            more = bool(self.active or self._pending or len(self.in_q)) \
+                and self.cache_len < self.max_len and budget[0] > 0
+            return ("tick", more)
+
+        tick_in_flight = [False]                   # touched only by the route
+
+        def still_generating(result):
+            if result[0] == "enq":
+                if tick_in_flight[0]:
+                    return None, []
+                tick_in_flight[0] = True
+                return None, [_TICK]
+            _, more = result
+            if more:
+                tick_in_flight[0] = True   # seeded ticks arrive via Source
+                return None, [_TICK]
+            tick_in_flight[0] = False
+            return None, []
+
+        stream: List = self._drain_submitted()
+        if self.active or self._pending:
+            # a previous run() was truncated (budget / max_len): seed a
+            # tick so the leftover batch resumes without new submissions
+            stream.insert(0, _TICK)
+        net = compose(Source(stream),
+                      Farm(decode_step, feedback=still_generating))
+        lower(net, "threads").to_graph().run_and_wait()
         return self.results
 
 

@@ -139,6 +139,30 @@ def test_pipeline_skeleton_and_grads():
     """)
 
 
+def test_skeleton_mesh_lowering_nests_pipeline_over_farms():
+    """With 8 devices and a 2-stage skeleton, negotiate_stage_axis gives a
+    (2, 4) mesh and lower(..., "mesh") streams microbatches through
+    pipeline_apply with a farm_map per stage row — the genuinely nested
+    device-flavour composition — and still matches the threads backend."""
+    run_sub("""
+        from repro.core import Farm, Feedback, Pipeline, lower
+        f = lambda x: x * 3 + 1
+        g = lambda x: x - 7
+        skel = Pipeline(Farm(f, 4, ordered=True), Farm(g, 4, ordered=True))
+        prog = lower(skel, "mesh", grain=8)
+        assert (prog.n_stage, prog.n_worker) == (2, 4), \\
+            (prog.n_stage, prog.n_worker)
+        xs = list(range(-50, 163))
+        out = prog(xs)
+        assert out == [g(f(x)) for x in xs] == lower(skel, "threads")(xs)
+        fb = Feedback(lambda x: x * 2 + 1, lambda x: x < 64, max_trips=32)
+        pfb = lower(fb, "mesh")
+        assert pfb.n_worker == 8
+        assert pfb(list(range(40))) == lower(fb, "threads")(list(range(40)))
+        print("skeleton mesh nested ok")
+    """)
+
+
 def test_ring_attention_matches_reference():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np

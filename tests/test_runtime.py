@@ -182,6 +182,18 @@ def test_serve_engine_order_and_isolation():
     assert solo.generated == batched.generated
 
 
+def test_serve_engine_resumes_after_truncated_run():
+    """A run() cut short by max_steps strands its batch mid-generation; a
+    later run() with no new submissions must seed a tick and finish it
+    (the old driver loop's `while self.active` behaviour)."""
+    cfg = ARCHS["phi3-mini-3.8b"].smoke()
+    eng = ServeEngine(cfg, max_batch=2, max_len=128, seed=0)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+    assert eng.run(max_steps=2) == []      # budget exhausted mid-prompt
+    results = eng.run()
+    assert len(results) == 1 and len(results[0].generated) == 4
+
+
 def test_serve_engine_recycles_slots():
     cfg = ARCHS["phi3-mini-3.8b"].smoke()
     eng = ServeEngine(cfg, max_batch=2, max_len=200)

@@ -1,0 +1,191 @@
+"""Skeleton IR semantics: backend parity (threads vs mesh), ordering
+included; IR edge cases (empty stream, all-GO_ON); the single-shard_map
+guarantee of the mesh lowering; and compat hygiene (no version probes
+outside repro/compat.py) — tier-1 for the unified skeleton layer."""
+import pathlib
+import re
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro import compat
+from repro.core import (Farm, Feedback, GO_ON, LoweringError, Net, Pipeline,
+                        Skeleton, Source, Stage, TaskFarm, compose, lower)
+
+
+def _f(x):
+    return x * 3 + 1
+
+
+def _g(x):
+    return x - 7
+
+
+# Programs are built once at module scope: the mesh lowering caches its
+# compiled shard_map per (rows, dtype) bucket, so every hypothesis example
+# reuses one compile.
+PIPE = Pipeline(Farm(_f, 4, ordered=True), Farm(_g, 4, ordered=True))
+PIPE_T = lower(PIPE, "threads")
+PIPE_M = lower(PIPE, "mesh")
+
+FB = Feedback(lambda x: x * 2 + 1, lambda x: x < 64, nworkers=3, max_trips=32)
+FB_T = lower(FB, "threads")
+FB_M = lower(FB, "mesh")
+
+
+# -- backend parity: identical ordered outputs -------------------------------
+@given(st.lists(st.integers(-1000, 1000), max_size=40))
+@settings(max_examples=10, deadline=None)
+def test_parity_pipeline_of_farms_ints(xs):
+    """lower(Pipeline(Farm(f), Farm(g)), threads|mesh): same ordered output
+    (ints are exact on both backends)."""
+    want = [_g(_f(x)) for x in xs]
+    assert PIPE_T(xs) == want
+    assert PIPE_M(xs) == want
+
+
+@given(st.lists(st.floats(-100.0, 100.0), max_size=40))
+@settings(max_examples=10, deadline=None)
+def test_parity_pipeline_of_farms_floats(xs):
+    """Float streams agree to float32 tolerance (the mesh program computes
+    in f32; the thread workers in Python f64)."""
+    t = PIPE_T(xs)
+    m = PIPE_M(xs)
+    assert len(t) == len(m) == len(xs)
+    np.testing.assert_allclose(t, m, rtol=1e-4, atol=1e-4)
+
+
+@given(st.lists(st.integers(0, 60), max_size=32))
+@settings(max_examples=10, deadline=None)
+def test_parity_feedback_farm(xs):
+    """The wrap-around loop: f applied until the predicate releases the
+    item, input order preserved — identical on the wrap-around SPSC ring
+    (threads) and the masked while_loop (mesh)."""
+    def ref(x):
+        x = x * 2 + 1
+        while x < 64:
+            x = x * 2 + 1
+        return x
+
+    want = [ref(x) for x in xs]
+    assert FB_T(xs) == want
+    assert FB_M(xs) == want
+
+
+def test_parity_empty_stream():
+    assert PIPE_T([]) == PIPE_M([]) == []
+    assert FB_T([]) == FB_M([]) == []
+
+
+def test_all_go_on_stream_on_ir():
+    """A farm whose worker filters everything (GO_ON) must terminate and
+    emit nothing — the EOS protocol outruns the empty output."""
+    drop_all = Farm(lambda x: GO_ON, 3, ordered=True)
+    assert lower(drop_all, "threads")(range(100)) == []
+    mixed = Pipeline(Farm(lambda x: x if x % 2 else GO_ON, 2, ordered=True),
+                     Farm(_f, 2, ordered=True))
+    assert lower(mixed, "threads")(range(10)) == [_f(x) for x in (1, 3, 5, 7, 9)]
+
+
+# -- acceptance: the mesh lowering is ONE shard_map program ------------------
+def test_mesh_lowering_is_single_shard_map(monkeypatch):
+    """Pipeline(Farm(f), Farm(g)) on the mesh backend compiles whole: one
+    shard_map (and no thread graph), so there is no host SPSC hop between
+    f and g."""
+    calls = []
+    real = compat.shard_map
+
+    def counting_shard_map(*args, **kw):
+        calls.append(kw.get("mesh"))
+        return real(*args, **kw)
+
+    monkeypatch.setattr(compat, "shard_map", counting_shard_map)
+    prog = lower(Pipeline(Farm(_f, 4, ordered=True),
+                          Farm(_g, 4, ordered=True)), "mesh")
+    xs = list(range(48))
+    assert prog(xs) == [_g(_f(x)) for x in xs]
+    assert len(calls) == 1, f"expected ONE shard_map program, saw {len(calls)}"
+    # same-bucket re-execution reuses the compiled program
+    assert prog(list(range(10))) == [_g(_f(x)) for x in range(10)]
+    assert len(calls) == 1
+
+
+def test_mesh_rejects_host_only_features():
+    import pytest
+    with pytest.raises(LoweringError, match="Feedback"):
+        lower(Farm(_f, 2, feedback=lambda r: (r, [])), "mesh")
+    with pytest.raises(LoweringError, match="backend"):
+        lower(Farm(_f, 2), "cuda-graphs")
+    with pytest.raises(LoweringError, match="Source"):
+        lower(Pipeline(Source(range(4)), Farm(_f, 2)), "mesh")
+
+
+def test_mesh_feedback_padding_rows_do_not_gate_loop():
+    """Bucket-padding zeros must not drive the feedback while_loop: with
+    worker(0)=0 a fixed point and loop_while(0) true, an unguarded pad row
+    would spin forever (no max_trips here on purpose)."""
+    fb = Feedback(lambda x: x * 2, lambda x: x < 10)
+    assert lower(fb, "mesh")([5]) == lower(fb, "threads")([5]) == [10]
+
+
+def test_mesh_rejects_int_overflow_instead_of_wrapping():
+    """Ints beyond int32 would silently wrap on the mesh while the threads
+    backend computes exact Python ints — that divergence must be loud."""
+    import pytest
+    with pytest.raises(LoweringError, match="int32"):
+        PIPE_M([2 ** 31])
+
+
+def test_mesh_rejects_undersized_capacity_instead_of_dropping():
+    """A capacity below the round-robin bucket fill would silently combine
+    dropped items to zeros — refuse at trace time instead."""
+    import pytest
+    with pytest.raises(LoweringError, match="capacity"):
+        lower(Farm(_f, 4, ordered=True), "mesh", capacity=1)(range(16))
+
+
+def test_feedback_max_trips_parity_on_both_backends():
+    """max_trips bounds the loop on BOTH backends: a predicate that never
+    releases (identity worker) emits after exactly max_trips services on
+    threads too, instead of spinning the wrap-around ring forever."""
+    fb = Feedback(lambda x: x, lambda x: x < 10, max_trips=3)
+    xs = [1, 2, 50]
+    assert lower(fb, "threads")(xs) == lower(fb, "mesh")(xs) == [1, 2, 50]
+
+
+# -- IR composition sugar and facades ----------------------------------------
+def test_compose_and_rshift_build_the_same_ir():
+    a = compose(_f, Farm(_g, 2, ordered=True))
+    b = Stage(_f) >> Farm(_g, 2, ordered=True)
+    assert [type(s) for s in a.stages] == [type(s) for s in b.stages]
+    xs = list(range(20))
+    assert lower(a, "threads")(xs) == lower(b, "threads")(xs) \
+        == [_g(_f(x)) for x in xs]
+
+
+def test_legacy_surfaces_are_ir_facades():
+    """PR-1's Net API and the seed's TaskFarm both resolve to the one IR."""
+    from repro.core import graph, skeleton
+    assert Net is Skeleton
+    assert graph.Farm is skeleton.Farm and graph.Pipeline is skeleton.Pipeline
+    farm = TaskFarm(2, preserve_order=True)
+    farm.add_stream([1, 2, 3])
+    farm.add_worker(skeleton.FnNode(_f))
+    assert farm.run_and_wait() == [_f(x) for x in [1, 2, 3]]
+
+
+# -- compat hygiene -----------------------------------------------------------
+def test_no_version_probes_outside_compat():
+    """repro/compat.py is the single JAX version-split point: no
+    hasattr(jax...) / jax.__version__ probes anywhere else in the package."""
+    root = pathlib.Path(next(iter(repro.__path__)))
+    probe = re.compile(r"hasattr\(\s*jax|jax\.__version__|"
+                       r"version\.parse|importlib_metadata")
+    offenders = []
+    for path in root.rglob("*.py"):
+        if path.name == "compat.py":
+            continue
+        if probe.search(path.read_text()):
+            offenders.append(str(path))
+    assert not offenders, f"version probes outside compat.py: {offenders}"
