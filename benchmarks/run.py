@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement):
   farm_overhead.py    — Fig. 6: farm overhead vs grain, derived speedup model
   farm_composition.py — graph runtime: pipeline-of-farms + feedback overhead
   skeleton_parity.py  — skeleton IR: same skeleton on both backends
+  sched_policies.py   — scheduling policies × grain on a skewed farm + fusion
   smith_waterman.py   — Fig. 7 + Table 1: SW database search GCUPS
   roofline.py         — EXPERIMENTS §Roofline terms from the dry-run artifacts
 
@@ -34,9 +35,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from . import (queues, farm_overhead, farm_composition, skeleton_parity,
-                   smith_waterman, roofline)
+                   sched_policies, smith_waterman, roofline)
     for mod in (queues, farm_overhead, farm_composition, skeleton_parity,
-                smith_waterman, roofline):
+                sched_policies, smith_waterman, roofline):
         mod.run(_emit)
     _emit("total_bench_wall", (time.time() - t0) * 1e6, "")
 

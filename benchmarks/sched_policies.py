@@ -1,0 +1,111 @@
+"""Scheduling-policy sweep + fusion payoff — the paper's fine-grain case.
+
+The paper's headline result (Sec. 6: 35-226% over OpenMP/Cilk/TBB on
+fine-grain Smith-Waterman tasks) rests on cheap hand-offs *and* smart
+placement.  This module measures the placement half on the threads
+backend: one ordered farm, policies × grain sizes, over a **skewed**
+stream — every ``SKEW_EVERY``-th task costs ``SKEW_FACTOR``× the base
+grain, and the skew period is a multiple of the worker count, so
+round-robin lands *every* slow task on worker 0 (worst-case head-of-line
+blocking).  ``ondemand`` / ``worksteal`` / ``costmodel`` rebalance; their
+``vs_rr`` speedup is the measured value of the scheduling layer.
+
+Workers "service" a task by sleeping its grain — i.e. they release the
+GIL, like the real workers this farm exists for (JAX dispatch, NumPy
+kernels, I/O).  A pure-Python spin would hold the GIL and serialize all
+compute regardless of placement, making every policy measure the same
+wall-clock; sleeping isolates exactly what this benchmark is about —
+placement — from the CPython artifact.
+
+Then the fusion rows: a two-stage fine-grain pipeline lowered with and
+without the grain-aware fusion pass, at a grain pinned *below* the
+auto-calibrated hand-off threshold (``sched.calibrate_handoff_us`` — the
+in-library version of the skeleton_parity measurement).  Fusion must
+remove at least one vertex and keep the output identical; the speedup is
+the per-hand-off saving the ROADMAP's fusion item predicted.
+
+Ordered-output equality across every policy and both fusion modes is
+asserted on every run, so the benchmark doubles as a parity smoke test
+(CI runs it with a tight item budget).
+
+Same CSV contract as the other benchmark modules:
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Farm, Pipeline, Stage, lower
+from repro.core.sched import calibrate_handoff_us
+
+NTASKS = 800
+NWORKERS = 4
+GRAINS_US = (100, 400)
+SKEW_EVERY = 8      # every 8th task is slow (8 ≡ 0 mod NWORKERS: rr pins
+SKEW_FACTOR = 20    # them all to one worker) ... and slow by 20x the grain
+POLICIES = ("rr", "ondemand", "worksteal", "costmodel")
+REPEATS = 2
+
+
+def _spin(us: float) -> None:
+    end = time.perf_counter() + us * 1e-6
+    while time.perf_counter() < end:
+        pass
+
+
+def _timed(prog, xs, want):
+    best = None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        out = prog(xs)
+        dt = time.perf_counter() - t0
+        assert out == want, "ordered-output mismatch"
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def run(emit):
+    xs = list(range(NTASKS))
+    # -- policies × grains on the skewed farm --------------------------------
+    for grain in GRAINS_US:
+        def worker(x, g=grain):
+            # GIL-releasing service (see module docstring)
+            time.sleep(g * (SKEW_FACTOR if x % SKEW_EVERY == 0 else 1) * 1e-6)
+            return x
+
+        base_rr = None
+        for pol in POLICIES:
+            prog = lower(Farm(worker, NWORKERS, ordered=True, scheduling=pol),
+                         "threads")
+            us = _timed(prog, xs, xs) / NTASKS * 1e6
+            if pol == "rr":
+                base_rr = us
+            emit(f"sched_{pol}_grain{grain}us", us,
+                 f"nworkers={NWORKERS},skew={SKEW_FACTOR}x/{SKEW_EVERY},"
+                 f"vs_rr={base_rr / us:.2f}")
+
+    # -- fusion at sub-threshold grain ---------------------------------------
+    thr = calibrate_handoff_us()
+    g_us = max(thr / 4, 0.05)          # guaranteed below the threshold
+
+    def _fa(x, g=g_us):
+        _spin(g)
+        return x + 1
+
+    def _fb(x, g=g_us):
+        _spin(g)
+        return x * 2
+
+    two = Pipeline(Stage(_fa, grain=g_us), Stage(_fb, grain=g_us))
+    want = [(x + 1) * 2 for x in xs]
+    unfused = lower(two, "threads", fuse=False)
+    fused = lower(two, "threads", fuse="auto", fuse_threshold_us=thr)
+    n_un = len(unfused.to_graph(xs).vertices)
+    n_fu = len(fused.to_graph(xs).vertices)
+    assert n_fu < n_un, "fusion must remove at least one vertex hand-off"
+    t_un = _timed(unfused, xs, want)
+    t_fu = _timed(fused, xs, want)
+    emit("fusion_unfused_2stage", t_un / NTASKS * 1e6, f"vertices={n_un}")
+    emit("fusion_fused_2stage", t_fu / NTASKS * 1e6,
+         f"vertices={n_fu},handoff_us={thr:.2f},grain_us={g_us:.2f},"
+         f"speedup={t_un / t_fu:.2f}")

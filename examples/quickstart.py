@@ -1,8 +1,10 @@
-"""Quickstart: the three layers of FastFlow-JAX in ~60 lines.
+"""Quickstart: the three layers of FastFlow-JAX in ~80 lines.
 
   1. the skeleton IR: ONE declarative expression, executed on BOTH
      backends — the host thread/SPSC graph and a single shard_map mesh
-     program (no host hop between stages);
+     program (no host hop between stages); plus the threads backend's
+     pluggable scheduling policies (Farm(scheduling=...)) and the
+     grain-aware fusion pass (lower(..., fuse=...));
   2. the paper's application: Smith-Waterman database search through an
      ordered farm;
   3. the LM framework: one reduced-config train step + one decode step.
@@ -14,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import Farm, Pipeline, lower
+from repro.core import CostModel, Farm, Pipeline, Stage, lower
 from repro.kernels import ops
 from repro.launch.steps import make_train_step
 from repro.models import init_cache, init_params, decode_step
@@ -29,6 +31,27 @@ on_mesh = lower(skel, "mesh")(range(10))        # ONE shard_map: farms fused
 print("threads:", on_threads)
 print("mesh:   ", on_mesh)
 assert on_threads == on_mesh
+
+# -- 1b. scheduling policies + grain-aware fusion (threads backend) ----------
+# Farm(scheduling=) takes a registry name — "rr" | "ondemand" | "worksteal"
+# | "costmodel" — or a repro.core.sched.Scheduler instance; placement never
+# changes ordered-farm output, only who services what.
+stolen = lower(Farm(lambda x: x * x, 4, ordered=True,
+                    scheduling="worksteal"), "threads")(range(10))
+priced = lower(Farm(lambda x: x * x, 4, ordered=True,
+                    scheduling=CostModel()), "threads")(range(10))
+assert stolen == priced == [x * x for x in range(10)]
+print("worksteal == costmodel:", stolen)
+
+# Stages declaring a fine grain= (µs of work per item, threads reading)
+# fuse into ONE vertex when the grain is below the calibrated hand-off
+# cost — fewer threads, fewer ring hops, identical output.
+fine = Pipeline(Stage(lambda x: x + 1, grain=1), Stage(lambda x: x * 2, grain=1))
+fused = lower(fine, "threads", fuse="auto", fuse_threshold_us=1e9)
+unfused = lower(fine, "threads", fuse=False)
+assert fused(range(8)) == unfused(range(8))
+print("fusion: vertices", len(unfused.to_graph(list(range(8))).vertices),
+      "->", len(fused.to_graph(list(range(8))).vertices))
 
 # -- 2. the paper's app: SW database search (host-only payloads) --------------
 rng = np.random.default_rng(0)

@@ -5,9 +5,13 @@
 # SPSC channels).  `lower(skel, backend=...)` picks the runtime.
 from .spsc import EOS, SPSCQueue
 from .lockq import LockQueue
-from .skeleton import (GO_ON, Farm, FarmStats, Feedback, FnNode, LoweringError,
-                       MeshProgram, Pipeline, Skeleton, Source, Stage,
-                       ThreadProgram, as_skeleton, compose, ff_node, lower)
+from .sched import (SCHEDULERS, CostModel, OnDemand, RoundRobin, Scheduler,
+                    WorkStealing, calibrate_handoff_us, make_scheduler)
+from .skeleton import (GO_ON, EmitMany, Farm, FarmStats, Feedback, FnNode,
+                       FusedNode,
+                       LatencyReservoir, LoweringError, MeshProgram, Pipeline,
+                       Skeleton, Source, Stage, ThreadProgram, as_skeleton,
+                       compose, ff_node, fuse, lower)
 from .graph import Accelerator, Graph, Net, Token, build
 from .farm import TaskFarm
 from .allocator import PagePool, PoolExhausted
@@ -18,11 +22,14 @@ from .dpipeline import negotiate_stage_axis, pipeline_apply, pipeline_utilisatio
 
 __all__ = [
     "EOS", "SPSCQueue", "LockQueue",
-    "GO_ON", "Accelerator", "Farm", "Feedback", "Graph", "Net", "Pipeline",
+    "GO_ON", "EmitMany", "Accelerator", "Farm", "Feedback", "Graph", "Net",
+    "Pipeline",
     "Skeleton", "Source", "Stage", "Token", "compose",
     "LoweringError", "MeshProgram", "ThreadProgram", "as_skeleton", "build",
-    "lower",
-    "FarmStats", "FnNode", "TaskFarm", "ff_node",
+    "lower", "fuse", "FusedNode",
+    "SCHEDULERS", "Scheduler", "RoundRobin", "OnDemand", "WorkStealing",
+    "CostModel", "make_scheduler", "calibrate_handoff_us",
+    "FarmStats", "LatencyReservoir", "FnNode", "TaskFarm", "ff_node",
     "PagePool", "PoolExhausted",
     "MDFExecutor", "MDFTask",
     "RingChannel", "chain_send", "double_buffered_ring", "ring_send",

@@ -40,6 +40,7 @@ from __future__ import annotations
 from typing import Any, List, Optional, Sequence, Type
 
 from .graph import Graph
+from .sched import make_scheduler
 from .skeleton import Farm, FarmStats, FnNode, _SeqNode, ff_node
 from .spsc import SPSCQueue
 
@@ -55,7 +56,8 @@ class TaskFarm:
     queue_class: ``SPSCQueue`` (paper) or ``LockQueue`` (baseline).
     capacity: per-ring capacity.
     preserve_order: emit collector output in emission (tag) order.
-    scheduling: ``"rr"`` round-robin | ``"ondemand"`` shortest-queue.
+    scheduling: policy name (``"rr"`` | ``"ondemand"`` | ``"worksteal"`` |
+        ``"costmodel"``) or a ``repro.core.sched.Scheduler``.
     speculative: enable straggler re-dispatch.
     straggler_factor: age threshold multiplier over p95 latency.
     """
@@ -67,13 +69,13 @@ class TaskFarm:
         queue_class: Type = SPSCQueue,
         capacity: int = 512,
         preserve_order: bool = False,
-        scheduling: str = "rr",
+        scheduling: Any = "rr",
         speculative: bool = False,
         straggler_factor: float = 4.0,
         min_straggler_age: float = 0.05,
     ):
         assert nworkers >= 1
-        assert scheduling in ("rr", "ondemand")
+        make_scheduler(scheduling)  # raises ValueError on an unknown policy
         self.nworkers = nworkers
         self.queue_class = queue_class
         self.capacity = capacity

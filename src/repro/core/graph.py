@@ -27,7 +27,9 @@ Construct (this module)          Paper section / figure
 ``ff_node`` (svc/svc_init/_end)  Fig. 2: the programming-model node API
 ``DispatchVertex``               Fig. 1-2 "Emitter" — active arbiter that
                                  fans one logical stream out over private
-                                 SPSC rings (round-robin / on-demand)
+                                 SPSC rings, driving a pluggable
+                                 ``sched.Scheduler`` policy (rr / ondemand
+                                 / worksteal / costmodel)
 ``MergeVertex``                  Fig. 1-2 "Collector" — active arbiter that
                                  fans many rings into one logical stream
 ``Farm(ordered=True)``           Fig. 1 (right): tagged tokens reordered at
@@ -67,9 +69,10 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
 
+from .sched import Scheduler, make_scheduler
 from .skeleton import (GO_ON, EmitMany, Farm, FarmStats, Feedback, FnNode,
-                       Pipeline, Skeleton, Source, Stage, _SeqNode,
-                       as_skeleton, compose, ff_node)
+                       Pipeline, Skeleton, Source, Stage, _FarmEmitMany,
+                       _SeqNode, as_skeleton, compose, ff_node)
 from .spsc import EOS, SPSCQueue
 
 __all__ = [
@@ -184,17 +187,38 @@ class Vertex:
 
 class StageVertex(Vertex):
     """Generic vertex: any fan-in (nondeterministic merge of untagged
-    payloads), any fan-out (round-robin or broadcast).  With no inbound
-    edges it is a *source*: ``svc(None)`` is called until it returns
-    ``None`` (EOS) — paper Fig. 2's emitter protocol."""
+    payloads), any fan-out (``"bcast"`` broadcast, or any scheduling
+    policy — name or :class:`~repro.core.sched.Scheduler` — for the
+    single-consumer routes, so ``Stage`` and ``Farm`` share one dispatch
+    code path).  With no inbound edges it is a *source*: ``svc(None)`` is
+    called until it returns ``None`` (EOS) — paper Fig. 2's emitter
+    protocol."""
 
-    def __init__(self, node: ff_node, *, route: str = "rr", name: str = "ff-stage"):
+    def __init__(self, node: ff_node, *, route: Any = "rr",
+                 name: str = "ff-stage"):
         super().__init__(node, name=name)
-        assert route in ("rr", "bcast")
+        if route == "bcast":
+            self._sched: Optional[Scheduler] = None
+        else:
+            try:
+                self._sched = make_scheduler(route)
+            except ValueError:
+                raise ValueError(
+                    f"unknown Stage route {route!r}: expected 'bcast', a "
+                    f"scheduling policy name, or a Scheduler") from None
+            if type(self._sched).place is not Scheduler.place:
+                # stage fan-out is pick()-routed per emission; a policy
+                # that holds tokens in the arbiter (custom place/pump,
+                # e.g. worksteal) needs the farm dispatch arbiter
+                raise ValueError(
+                    f"Stage route {route!r} is a token-holding policy "
+                    f"(custom place()); stage fan-out supports only "
+                    f"pick()-based policies — use a Farm for it")
         self.route = route
-        self._rr = 0
 
     def _loop(self) -> None:
+        if self._sched is not None:
+            self._sched.bind(self.outs, None)
         if not self.ins:  # source
             while True:
                 out = self.node.svc(None)
@@ -235,8 +259,7 @@ class StageVertex(Vertex):
                 if not self._push_abortable(q, out):
                     raise _Aborted()
         else:
-            q = self.outs[self._rr % len(self.outs)]
-            self._rr += 1
+            q = self.outs[self._sched.pick()]
             if not self._push_abortable(q, out):
                 raise _Aborted()
 
@@ -246,18 +269,21 @@ class DispatchVertex(Vertex):
 
     One logical input — a source ``ff_node``, an upstream ring, or a
     wrap-around ring — fanned out over private SPSC rings to the workers.
-    Owns tag assignment, the scheduling policy (round-robin / on-demand
-    shortest-queue) and straggler re-issue.  When ``loop_ring`` is set this
-    vertex is also the loop master: it terminates only when every upstream
-    edge has delivered EOS *and* the loop is quiescent
-    (``entered == retired`` and the wrap-around ring is drained)."""
+    Owns tag assignment and straggler re-issue; task *placement* is
+    delegated to a pluggable :class:`~repro.core.sched.Scheduler` (rr /
+    ondemand / worksteal / costmodel, or user-supplied), driven entirely
+    from this arbiter's thread so the single-writer SPSC discipline is
+    untouched.  When ``loop_ring`` is set this vertex is also the loop
+    master: it terminates only when every upstream edge has delivered EOS
+    *and* the loop is quiescent (``entered == retired``, the wrap-around
+    ring drained, and no tokens left inside the scheduling policy)."""
 
     def __init__(
         self,
         tags: TagSpace,
         node: Optional[ff_node] = None,
         *,
-        scheduling: str = "rr",
+        scheduling: Any = "rr",
         speculative: bool = False,
         straggler_factor: float = 4.0,
         min_straggler_age: float = 0.05,
@@ -265,25 +291,16 @@ class DispatchVertex(Vertex):
         name: str = "ff-emitter",
     ):
         super().__init__(node, name=name)
-        assert scheduling in ("rr", "ondemand")
+        self.sched = make_scheduler(scheduling)
+        self.scheduling = self.sched.name
         self.tags = tags
-        self.scheduling = scheduling
         self.speculative = speculative
         self.straggler_factor = straggler_factor
         self.min_straggler_age = min_straggler_age
         self.loop_ring = loop_ring
-        self._rr = 0
         # wrap-around tokens stashed while a worker ring is full (see
         # _push_with_loop_drain: this is what breaks cyclic backpressure)
         self._stash: List[Any] = []
-
-    # -- scheduling policies ------------------------------------------------
-    def _pick(self) -> int:
-        if self.scheduling == "ondemand":
-            # reading len() of an SPSC from a third thread is heuristically
-            # stale but safe — exactly FastFlow's on-demand mode.
-            return min(range(len(self.outs)), key=lambda w: len(self.outs[w]))
-        return self._rr % len(self.outs)
 
     def _push_with_loop_drain(self, q: Any, tok: Token) -> None:
         """Blocking push that keeps draining the wrap-around ring while the
@@ -312,10 +329,34 @@ class DispatchVertex(Vertex):
         ts.inflight[tok.tag] = tok
         if self.loop_ring is not None:
             ts.entered += 1
-        widx = self._pick()
-        self._rr += 1
-        self._push_with_loop_drain(self.outs[widx], tok)
+        self.sched.place(tok, self._emit_to)
         ts.stats.tasks_emitted += 1
+        # backpressure for token-holding policies (worksteal): stop taking
+        # input while the policy backlog is over its high-water mark,
+        # draining the wrap-around ring meanwhile (same deadlock-avoidance
+        # as _push_with_loop_drain)
+        hw = self.sched.high_water
+        if hw is not None and self.sched.pending() > hw:
+            spins = 0
+            while self.sched.pending() > hw:
+                if self.sched.pump():
+                    continue
+                if self.graph.failed:
+                    raise _Aborted()
+                if self.loop_ring is not None:
+                    item = self.loop_ring.pop()
+                    if item is not _EMPTY:
+                        self._stash.append(item)
+                        continue
+                spins += 1
+                if spins > 64:
+                    time.sleep(_POLL)
+
+    def _emit_to(self, widx: int, tok: Token) -> None:
+        """Blocking-push callback handed to ``Scheduler.place`` (policies
+        that hold tokens, like worksteal, never call it and push
+        non-blockingly from ``pump`` instead)."""
+        self._push_with_loop_drain(self.outs[widx], tok)
 
     def _respeculate(self) -> None:
         ts = self.tags
@@ -327,8 +368,7 @@ class DispatchVertex(Vertex):
                 continue
             if now - tok.issued_at > threshold:
                 dup = Token(tag=t, payload=tok.payload, issued_at=now, duplicate=True)
-                widx = self._pick()
-                self._rr += 1
+                widx = self.sched.pick()
                 if self.outs[widx].push(dup):
                     # re-arm the age clock; a still-stale tag (e.g. its copy
                     # landed on a dead worker) will speculate again, to a
@@ -339,6 +379,7 @@ class DispatchVertex(Vertex):
 
     def _loop(self) -> None:
         ts = self.tags
+        self.sched.bind(self.outs, ts.stats)
         ndisp = 0
         if self.node is not None and not self.ins:
             # source mode: the emitter node generates the stream
@@ -350,6 +391,7 @@ class DispatchVertex(Vertex):
                     continue
                 self._dispatch(task)
                 ndisp += 1
+                self.sched.pump()  # flush/steal while we generate
                 # keep the wrap-around ring moving while we generate
                 if self.loop_ring is not None:
                     while True:
@@ -362,7 +404,7 @@ class DispatchVertex(Vertex):
                     self._respeculate()
             # source exhausted; drain the loop to quiescence
             while self.loop_ring is not None:
-                progress = False
+                progress = self.sched.pump()
                 while self._stash:
                     self._dispatch(self._stash.pop(0))
                     progress = True
@@ -372,18 +414,27 @@ class DispatchVertex(Vertex):
                         break
                     progress = True
                     self._dispatch(item)
-                if not self._stash and ts.entered == ts.retired \
+                if not self._stash and not self.sched.pending() \
+                        and ts.entered == ts.retired \
                         and self.loop_ring.empty():
                     break
                 if self.graph.failed:
                     break  # a vertex died: tokens can never retire
                 if not progress:
-                    time.sleep(_POLL)
+                    # yield (not sleep) while the policy still holds
+                    # tokens: a fine-grain worker drains its primed ring
+                    # in far less than a poll tick
+                    time.sleep(0 if self.sched.pending() else _POLL)
+            # flush tokens still held by the policy (e.g. worksteal
+            # backlogs) before the EOS goes out behind them
+            while self.sched.pending() and not self.graph.failed:
+                if not self.sched.pump():
+                    time.sleep(0)
         else:
             eos: set = set()
             spec_mark = 0  # dispatches at the last speculation sweep
             while True:
-                progress = False
+                progress = self.sched.pump()
                 # wrap-around tokens first: looped-back work is older
                 while self._stash:
                     self._dispatch(self._stash.pop(0))
@@ -419,7 +470,8 @@ class DispatchVertex(Vertex):
                     # sorts the whole latency list and must not run while idle
                     spec_mark = ndisp
                     self._respeculate()
-                if len(eos) == len(self.ins) and not self._stash:
+                if len(eos) == len(self.ins) and not self._stash \
+                        and not self.sched.pending():
                     if self.loop_ring is None:
                         break
                     # Quiescence check — read order matters: ``retired``
@@ -432,7 +484,8 @@ class DispatchVertex(Vertex):
                 if self.graph.failed:
                     break  # a vertex died: quiescence can never be reached
                 if not progress:
-                    time.sleep(_POLL)
+                    # yield while the policy holds tokens (see above)
+                    time.sleep(0 if self.sched.pending() else _POLL)
         # straggler watchdog: keep re-issuing until everything is collected
         while self.speculative and any(t not in ts.done for t in ts.inflight):
             if self.graph.failed:
@@ -443,27 +496,65 @@ class DispatchVertex(Vertex):
 
 class WorkerVertex(Vertex):
     """Farm worker: one inbound and one outbound ring, tags carried
-    through untouched (the worker never sees the tag)."""
+    through untouched (the worker never sees the tag).
+
+    When the farm's policy asks for it (``needs_service_stats``, e.g.
+    ``costmodel``), each worker maintains its own service-time EWMA in
+    ``stats.service_ewma[index]`` (single writer per key); other policies
+    skip the per-task timing entirely.  With an ``idle_ring`` (the
+    ``worksteal`` policy's side-channel) the worker advertises itself to
+    the dispatch arbiter whenever its inbound ring runs dry, which is what
+    triggers a steal from the deepest peer backlog."""
 
     def __init__(self, node: ff_node, index: int, stats: FarmStats, *,
-                 survivable: bool = False, name: str = "ff-worker"):
+                 survivable: bool = False, idle_ring: Optional[Any] = None,
+                 record_service: bool = False, name: str = "ff-worker"):
         super().__init__(node, name=name)
         self.index = index
         self.stats = stats
         self.survivable = survivable
+        self.idle_ring = idle_ring
+        self.record_service = record_service
 
     def _loop(self) -> None:
         q_in, q_out = self.ins[0], self.outs[0]
+        stats = self.stats
+        record = self.record_service  # opt-in: only pay the timing when a
+        signaled = False              # policy consumes the EWMA
+        spins = 0
         while True:
-            tok = q_in.pop_wait()
+            if self.idle_ring is None:
+                tok = q_in.pop_wait()
+            else:
+                tok = q_in.pop()
+                if tok is _EMPTY:
+                    # steal side-channel: advertise idleness (re-advertise
+                    # periodically — a signal consumed while the arbiter
+                    # had nothing to give must not strand this worker)
+                    if not signaled or spins % 512 == 511:
+                        signaled = self.idle_ring.push(self.index) or signaled
+                    spins += 1
+                    if spins > 64:
+                        time.sleep(_POLL)
+                    continue
+                signaled = False
+                spins = 0
             if tok is EOS:
                 return
-            result = self.node.svc(tok.payload)
+            if record:
+                t0 = time.monotonic()
+                result = self.node.svc(tok.payload)
+                dt = time.monotonic() - t0
+                prev = stats.service_ewma.get(self.index)
+                stats.service_ewma[self.index] = \
+                    dt if prev is None else 0.8 * prev + 0.2 * dt
+            else:
+                result = self.node.svc(tok.payload)
             out = Token(tag=tok.tag, payload=result,
                         issued_at=tok.issued_at, duplicate=tok.duplicate)
             if not self._push_abortable(q_out, out):
                 raise _Aborted()
-            self.stats.per_worker[self.index] = self.stats.per_worker.get(self.index, 0) + 1
+            stats.per_worker[self.index] = stats.per_worker.get(self.index, 0) + 1
 
     def _on_error(self, e: BaseException) -> None:
         if self.survivable:
@@ -559,6 +650,12 @@ class MergeVertex(Vertex):
             payload = emit
         else:
             self._retire()
+        if isinstance(payload, _FarmEmitMany):
+            # a farm-absorbed tail multi-emitted: flatten downstream, as
+            # the unfused trailing StageVertex would have
+            for p in payload:
+                self._deliver(p)
+            return
         self._deliver(payload)
 
     def _retire(self) -> None:
@@ -676,8 +773,12 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
             loop_ring=loop_ring, feedback=skel.feedback,
         ))
         for i, node in enumerate(skel.worker_nodes):
+            # the policy may want a steal side-channel (worker -> arbiter)
+            idle = disp.sched.worker_channel(i, qc)
             w = g.add(WorkerVertex(node, i, ts.stats,
                                    survivable=skel.speculative,
+                                   idle_ring=idle,
+                                   record_service=disp.sched.needs_service_stats,
                                    name=f"ff-worker-{i}"))
             g.connect(disp, w, capacity=cap, queue_class=qc)
             g.connect(w, merge, capacity=cap, queue_class=qc)

@@ -44,9 +44,10 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
 
 __all__ = [
-    "GO_ON", "EmitMany", "ff_node", "FnNode", "FarmStats",
+    "GO_ON", "EmitMany", "ff_node", "FnNode", "FusedNode",
+    "FarmStats", "LatencyReservoir",
     "Skeleton", "Stage", "Source", "Pipeline", "Farm", "Feedback",
-    "compose", "as_skeleton",
+    "compose", "as_skeleton", "fuse",
     "LoweringError", "lower", "BACKENDS", "ThreadProgram", "MeshProgram",
 ]
 
@@ -121,22 +122,161 @@ class EmitMany(list):
     ordinary payload, because their tokens are 1:1 by tag."""
 
 
+class _FarmEmitMany(EmitMany):
+    """Marker: a farm-absorbed tail chain multi-emitted.  The merge
+    arbiter flattens this downstream (one ``_deliver`` per element) — the
+    behaviour the unfused trailing ``StageVertex`` would have had —
+    whereas an ordinary ``EmitMany`` worker payload still crosses the
+    collector whole (tokens are 1:1 by tag)."""
+
+
+class FusedNode(ff_node):
+    """Several nodes executed back-to-back inside ONE vertex — the result
+    of the :func:`fuse` pass collapsing a sub-threshold-grain hand-off.
+
+    Chain semantics mirror what the separate vertices would have done.
+
+    ``flatten=True`` (stage∘stage fusion): ``GO_ON`` anywhere filters the
+    item; ``None`` from the FIRST node propagates as ``None`` (in source
+    position that is EOS, mid-pipeline the vertex filters it — both
+    exactly the unfused behaviour), while ``None`` from a later node
+    becomes ``GO_ON`` (the downstream vertex would merely have skipped
+    that one item, never ended the stream).  An intermediate
+    :class:`EmitMany` fans each element through the rest of the chain,
+    because ``StageVertex._emit`` would have flattened it onto the ring.
+
+    ``flatten=False`` (farm-worker∘stage fusion): a worker's token is 1:1
+    by tag and the merge arbiter retires ``GO_ON`` payloads silently but
+    delivers anything else — including ``None`` and whole ``EmitMany``
+    payloads — so the fused tail runs on every non-``GO_ON`` worker
+    result; a tail result of ``None``/``GO_ON`` returns ``GO_ON`` (the
+    token retires, nothing is emitted — what the downstream stage
+    vertex's filtering would have produced), and a tail result that IS an
+    ``EmitMany`` is wrapped in :class:`_FarmEmitMany` so the merge
+    arbiter flattens it downstream — because unfused, the trailing
+    ``StageVertex`` flattens whatever ``EmitMany`` its node returns.
+
+    ``svc_init``/``svc_end`` run once per constituent, in stream order
+    (``svc_end`` reversed, like unwinding the pipeline)."""
+
+    def __init__(self, nodes: Iterable[Any], *, flatten: bool = True):
+        self.nodes: List[ff_node] = [_as_node(n) for n in nodes]
+        self.flatten = flatten
+
+    def svc_init(self) -> None:
+        for n in self.nodes:
+            n.svc_init()
+
+    def svc_end(self) -> None:
+        for n in reversed(self.nodes):
+            n.svc_end()
+
+    def svc(self, task: Any) -> Any:
+        if not self.flatten:
+            return self._apply_farm(task)
+        return self._apply(0, task)
+
+    def _apply(self, i: int, task: Any) -> Any:
+        nodes = self.nodes
+        start = i
+        while i < len(nodes):
+            task = nodes[i].svc(task)
+            i += 1
+            if task is None:
+                # only the head of the chain may signal EOS/None onward;
+                # a later node's None filters one item, like its vertex
+                return None if (start == 0 and i == 1) else GO_ON
+            if task is GO_ON:
+                return GO_ON
+            if isinstance(task, EmitMany) and i < len(nodes):
+                out = EmitMany()
+                for t in task:
+                    r = self._apply(i, t)
+                    if r is None or r is GO_ON:
+                        continue
+                    if isinstance(r, EmitMany):
+                        out.extend(r)
+                    else:
+                        out.append(r)
+                return out
+        return task
+
+    def _apply_farm(self, task: Any) -> Any:
+        nodes = self.nodes
+        task = nodes[0].svc(task)          # the original worker
+        for n in nodes[1:]:                # the absorbed stage chain
+            if task is GO_ON:
+                return GO_ON               # merge would have retired it
+            task = n.svc(task)             # unfused stages see None too
+        if task is None or task is GO_ON:
+            return GO_ON
+        return _FarmEmitMany(task) if isinstance(task, EmitMany) else task
+
+
+class LatencyReservoir:
+    """Bounded sliding-window latency sample (most recent ``cap`` values).
+
+    The merge arbiter appends one latency per collected task; a plain list
+    grew without bound, which leaked memory in long-running farms (the
+    ``ServeEngine`` decode loop appends one per tick, forever).  A ring
+    overwrite of the oldest entry keeps the sample bounded AND makes the
+    p95 a *recent-window* statistic, which is the better straggler signal
+    anyway — ancient latencies from a cold start should not set today's
+    re-issue threshold.  ``count`` still tracks lifetime appends.
+
+    Single-writer: only the merge arbiter appends; the dispatch arbiter's
+    reads (p95) are benignly stale, same as every other cross-arbiter read
+    in the runtime."""
+
+    __slots__ = ("_cap", "_buf", "_next", "count")
+
+    def __init__(self, cap: int = 2048):
+        assert cap > 0
+        self._cap = cap
+        self._buf: List[float] = []
+        self._next = 0
+        self.count = 0
+
+    def append(self, x: float) -> None:
+        if len(self._buf) < self._cap:
+            self._buf.append(x)
+        else:
+            self._buf[self._next] = x
+            self._next = (self._next + 1) % self._cap
+        self.count += 1
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self):
+        return iter(self._buf)
+
+    def __bool__(self) -> bool:
+        return bool(self._buf)
+
+
 @dataclass
 class FarmStats:
-    """Thread-backend farm telemetry (dispatch/merge arbiters fill it in)."""
+    """Thread-backend farm telemetry (dispatch/merge arbiters and the
+    workers fill it in; every field has exactly one writer thread — or,
+    for the per-worker dicts, one writer per key)."""
 
     tasks_emitted: int = 0
     tasks_collected: int = 0
     duplicates_issued: int = 0
     duplicates_dropped: int = 0
+    steals: int = 0
     per_worker: Dict[int, int] = field(default_factory=dict)
-    latencies: List[float] = field(default_factory=list)
+    # worker i's service-time EWMA, written only by worker i; the
+    # CostModel scheduling policy reads it for adaptive placement
+    service_ewma: Dict[int, float] = field(default_factory=dict)
+    latencies: LatencyReservoir = field(default_factory=LatencyReservoir)
     worker_failures: List = field(default_factory=list)
 
     def p95_latency(self) -> float:
-        if not self.latencies:
-            return 0.0
         xs = sorted(self.latencies)
+        if not xs:
+            return 0.0
         return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
 
 
@@ -244,9 +384,11 @@ class Farm(Skeleton):
     grain: items per microbatch hint — the mesh lowering uses it as the
         ``pipeline_apply`` microbatch size; the fusion policy (ROADMAP) will
         use it on the thread side.
-    scheduling: ``"rr"`` round-robin | ``"ondemand"`` shortest-queue
-        (thread backend; the mesh emitter policy is round-robin by global
-        item index — see ``dfarm.roundrobin_dest``).
+    scheduling: thread-backend placement policy — a registry name
+        (``"rr"`` | ``"ondemand"`` | ``"worksteal"`` | ``"costmodel"``) or
+        a :class:`repro.core.sched.Scheduler` instance/subclass (cloned
+        per build, so the IR stays pure data).  The mesh emitter policy is
+        round-robin by global item index — see ``dfarm.roundrobin_dest``.
     speculative / straggler_factor / min_straggler_age: straggler re-issue
         (thread backend).
     feedback: wrap-around (collector → emitter) edge, paper Sec. 5, called
@@ -264,7 +406,7 @@ class Farm(Skeleton):
         collector: Optional[ff_node] = None,
         ordered: bool = False,
         grain: Optional[int] = None,
-        scheduling: str = "rr",
+        scheduling: Any = "rr",
         speculative: bool = False,
         straggler_factor: float = 4.0,
         min_straggler_age: float = 0.05,
@@ -282,7 +424,8 @@ class Farm(Skeleton):
             nworkers = 1 if nworkers is None else nworkers
             nodes = [node] * nworkers
         assert nworkers >= 1 and len(nodes) == nworkers
-        assert scheduling in ("rr", "ondemand")
+        from .sched import make_scheduler
+        make_scheduler(scheduling)  # raises ValueError on an unknown policy
         assert not (ordered and feedback is not None), \
             "ordering across a wrap-around edge is undefined (tags are " \
             "re-assigned per loop trip) — use ordered=False with feedback"
@@ -343,8 +486,10 @@ class Feedback(Skeleton):
 
     def __init__(self, worker: Any, loop_while: Callable[[Any], Any], *,
                  nworkers: int = 1, max_trips: Optional[int] = None,
-                 scheduling: str = "rr", grain: Optional[int] = None,
+                 scheduling: Any = "rr", grain: Optional[int] = None,
                  name: str = "ff-feedback"):
+        from .sched import make_scheduler
+        make_scheduler(scheduling)  # raises ValueError on an unknown policy
         self.node = _as_node(worker)
         self.loop_while = loop_while
         self.nworkers = nworkers
@@ -390,6 +535,130 @@ class Feedback(Skeleton):
 
 
 # ---------------------------------------------------------------------------
+# grain-aware stage fusion (IR -> IR rewrite for the threads lowering)
+# ---------------------------------------------------------------------------
+def _stage_fusible(s: "Skeleton", threshold_us: Optional[float],
+                   force: bool) -> bool:
+    if not isinstance(s, Stage):
+        return False
+    if force:
+        return True
+    return (s.grain is not None and threshold_us is not None
+            and s.grain < threshold_us)
+
+
+def _stateless(node: ff_node) -> bool:
+    """Conservatively 'safe to replicate across farm workers': FnNode
+    wrappers (pure-callable convention) and fusions thereof."""
+    if isinstance(node, FusedNode):
+        return all(_stateless(n) for n in node.nodes)
+    return isinstance(node, FnNode)
+
+
+def _merge_stages(a: "Stage", b: "Stage") -> "Stage":
+    def parts(s: "Stage") -> List[ff_node]:
+        n = s.node
+        return list(n.nodes) if isinstance(n, FusedNode) and n.flatten else [n]
+
+    # the fused stage's grain is the combined per-item work, so a run of
+    # fine-grain stages stops merging once the fusion itself gets coarse
+    grain = (a.grain + b.grain
+             if a.grain is not None and b.grain is not None else None)
+    return Stage(FusedNode(parts(a) + parts(b)),
+                 name=f"fuse({a.name}+{b.name})", grain=grain)
+
+
+def _farm_can_absorb(farm: "Farm", stage: "Stage") -> bool:
+    # feedback would re-apply the stage every loop trip; a collector node
+    # runs between merge and the stage, so absorbing would reorder them;
+    # a stateful stage node cannot be replicated across workers.
+    return (farm.feedback is None and farm.collector is None
+            and _stateless(stage.node))
+
+
+def _chain_parts(node: ff_node) -> List[ff_node]:
+    return (list(node.nodes)
+            if isinstance(node, FusedNode) and node.flatten else [node])
+
+
+def _absorb_one(worker: ff_node, snode: ff_node) -> FusedNode:
+    """Fuse ``snode`` behind ``worker``: flatten=False exactly at the
+    worker/stage junction (the collector crossing), while repeated
+    absorptions keep the stage side one flatten=True chain (stage-to-stage
+    EmitMany flattening is preserved between absorbed stages)."""
+    if isinstance(worker, FusedNode) and not worker.flatten:
+        head, tail = worker.nodes[0], worker.nodes[1]
+        parts = _chain_parts(tail) + _chain_parts(snode)
+        return FusedNode([head, FusedNode(parts)], flatten=False)
+    return FusedNode([worker, snode], flatten=False)
+
+
+def _absorb_stage_into_farm(farm: "Farm", stage: "Stage") -> "Farm":
+    return Farm(
+        [_absorb_one(w, stage.node) for w in farm.worker_nodes],
+        emitter=farm.emitter, ordered=farm.ordered, grain=farm.grain,
+        scheduling=farm.scheduling, speculative=farm.speculative,
+        straggler_factor=farm.straggler_factor,
+        min_straggler_age=farm.min_straggler_age,
+        queue_class=farm.queue_class, capacity=farm.capacity,
+        stats=farm.stats)
+
+
+def fuse(skel: Any, *, threshold_us: Optional[float] = None,
+         force: bool = False) -> "Skeleton":
+    """Grain-aware fusion pass (ROADMAP "graph-level fusion"): rewrite the
+    IR so hand-offs that cost more than the work they move disappear.
+
+    Two rewrites, applied left-to-right over a :class:`Pipeline`:
+
+    * **stage ∘ stage** — adjacent ``Stage``\\ s whose declared ``grain=``
+      (per-item service time, µs, the threads-side reading of the grain
+      attribute; the mesh backend reads it as microbatch rows) is below
+      ``threshold_us`` collapse into one vertex running a
+      :class:`FusedNode` chain.  The merged stage's grain is the sum, so
+      runs stop merging once the fusion itself gets coarse.
+    * **farm ∘ trailing stage** — a ``Farm`` followed by a sub-threshold
+      stateless ``Stage`` absorbs it into every worker (the hand-off
+      through the collector ring disappears; ordering still holds because
+      tags reorder at the merge arbiter regardless of what ran in the
+      worker).  Farms with ``feedback=`` or a collector node, and stateful
+      stage nodes, are never absorbed.
+
+    ``force=True`` fuses every adjacent eligible pair regardless of grain
+    (used by tests/benchmarks to pin behaviour); the default ``"auto"``
+    mode of ``lower(skel, "threads")`` calls this with the calibrated
+    hand-off threshold (:func:`repro.core.sched.calibrate_handoff_us`)
+    only when some stage actually declares a grain — skeletons that don't
+    opt in are untouched.
+    """
+    skel = as_skeleton(skel)
+    if not isinstance(skel, Pipeline):
+        return skel
+    out: List[Skeleton] = []
+    for s in skel.stages:
+        prev = out[-1] if out else None
+        if _stage_fusible(s, threshold_us, force):
+            if isinstance(prev, Stage) and _stage_fusible(prev, threshold_us,
+                                                          force):
+                out[-1] = _merge_stages(prev, s)
+                continue
+            if isinstance(prev, Farm) and _farm_can_absorb(prev, s):
+                out[-1] = _absorb_stage_into_farm(prev, s)
+                continue
+        out.append(s)
+    return out[0] if len(out) == 1 else Pipeline(*out)
+
+
+def _has_grained_stage(skel: "Skeleton") -> bool:
+    if isinstance(skel, Pipeline):
+        return any(_has_grained_stage(s) for s in skel.stages)
+    return isinstance(skel, Stage) and skel.grain is not None
+
+
+_fuse_pass = fuse  # ThreadProgram's `fuse=` parameter shadows the name
+
+
+# ---------------------------------------------------------------------------
 # lowering: backend registry + programs
 # ---------------------------------------------------------------------------
 class LoweringError(ValueError):
@@ -418,12 +687,27 @@ def lower(skel: Any, backend: str = "threads", **opts: Any):
 
 class ThreadProgram:
     """Threads lowering: the skeleton wired onto the PR-1 graph runtime
-    (one thread per vertex, lock-free SPSC rings for every edge)."""
+    (one thread per vertex, lock-free SPSC rings for every edge).
+
+    ``fuse`` controls the grain-aware fusion pass: ``"auto"`` (default)
+    collapses hand-offs whose declared stage ``grain=`` is below the
+    calibrated threshold (``fuse_threshold_us``, or the measured per-item
+    hand-off cost when None — calibration only runs if some stage declares
+    a grain); ``True`` force-fuses every eligible adjacent pair; ``False``
+    disables the pass."""
 
     backend = "threads"
 
     def __init__(self, skeleton: Skeleton, *,
-                 queue_class: Optional[Type] = None, capacity: int = 512):
+                 queue_class: Optional[Type] = None, capacity: int = 512,
+                 fuse: Any = "auto", fuse_threshold_us: Optional[float] = None):
+        if fuse and isinstance(skeleton, Pipeline):
+            force = fuse is True
+            thr = fuse_threshold_us
+            if not force and thr is None and _has_grained_stage(skeleton):
+                from .sched import calibrate_handoff_us
+                thr = calibrate_handoff_us()
+            skeleton = _fuse_pass(skeleton, threshold_us=thr, force=force)
         self.skeleton = skeleton
         self.queue_class = queue_class
         self.capacity = capacity

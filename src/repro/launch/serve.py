@@ -45,6 +45,7 @@ import numpy as np
 
 from ..configs import ARCHS
 from ..core.allocator import PagePool
+from ..core.sched import CostModel
 from ..core.skeleton import Farm, Source, compose, lower
 from ..core.spsc import SPSCQueue
 from ..models import decode_step as model_decode, init_cache, init_params
@@ -234,8 +235,16 @@ class ServeEngine:
             # a previous run() was truncated (budget / max_len): seed a
             # tick so the leftover batch resumes without new submissions
             stream.insert(0, _TICK)
+        # CostModel placement: the decode worker's per-tick service time
+        # feeds stats.service_ewma, so when the decode farm is widened to
+        # several workers (data-parallel replicas), a replica pinned by a
+        # slow sequence stops accumulating queue — requests no longer
+        # serialize behind a round-robin slot.  With today's single shared
+        # -cache worker it is placement-neutral, and the EWMA doubles as
+        # live tick-latency telemetry.
         net = compose(Source(stream),
-                      Farm(decode_step, feedback=still_generating))
+                      Farm(decode_step, feedback=still_generating,
+                           scheduling=CostModel()))
         lower(net, "threads").to_graph().run_and_wait()
         return self.results
 

@@ -1,0 +1,364 @@
+"""Scheduling-layer + fusion semantics: ordered-output parity across all
+placement policies on skewed-grain streams, work-stealing actually
+rebalancing, policy-object specs, the ValueError contracts, grain-aware
+stage fusion (fewer vertices, identical output, chain semantics), and the
+bounded latency reservoir — tier-1 for the pluggable scheduling layer."""
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CostModel, Farm, FarmStats, Feedback, FnNode,
+                        FusedNode, GO_ON, EmitMany, OnDemand, Pipeline,
+                        RoundRobin, Scheduler, Stage, TaskFarm, WorkStealing,
+                        compose, ff_node, fuse, lower, make_scheduler)
+from repro.core.graph import StageVertex
+from repro.core.skeleton import LatencyReservoir
+
+POLICIES = ("rr", "ondemand", "worksteal", "costmodel")
+
+
+def _f(x):
+    return x * 3 + 1
+
+
+def _g(x):
+    return x - 7
+
+
+# -- property: ordered parity across every policy on skewed streams ----------
+@given(st.lists(st.tuples(st.integers(-1000, 1000), st.integers(0, 3)),
+                max_size=50),
+       st.integers(1, 4))
+@settings(max_examples=6, deadline=None)
+def test_policy_parity_ordered_skewed(tasks, nworkers):
+    """All four policies produce the SAME ordered output on a stream whose
+    per-task grain is skewed (0-3 sleep quanta): placement must never leak
+    into ordered-farm semantics."""
+    def worker(t):
+        x, skew = t
+        if skew:
+            time.sleep(skew * 0.0002)
+        return _f(x)
+
+    want = [_f(x) for x, _ in tasks]
+    for pol in POLICIES:
+        out = lower(Farm(worker, nworkers, ordered=True, scheduling=pol),
+                    "threads")(tasks)
+        assert out == want, pol
+
+
+@given(st.lists(st.integers(-500, 500), max_size=60))
+@settings(max_examples=6, deadline=None)
+def test_policy_parity_unordered_multiset(xs):
+    for pol in POLICIES:
+        out = lower(Farm(_f, 3, scheduling=pol), "threads")(xs)
+        assert sorted(out) == sorted(_f(x) for x in xs), pol
+
+
+@given(st.lists(st.integers(0, 60), max_size=24))
+@settings(max_examples=4, deadline=None)
+def test_policy_parity_feedback_loop(xs):
+    """The wrap-around loop terminates by quiescence under every policy —
+    including worksteal, whose arbiter-held backlog must count against
+    quiescence."""
+    def ref(x):
+        x = x * 2 + 1
+        while x < 64:
+            x = x * 2 + 1
+        return x
+
+    want = [ref(x) for x in xs]
+    for pol in POLICIES:
+        fb = Feedback(lambda x: x * 2 + 1, lambda x: x < 64, nworkers=3,
+                      scheduling=pol)
+        assert lower(fb, "threads")(xs) == want, pol
+
+
+def test_policy_objects_and_classes_accepted():
+    """Farm(scheduling=) takes a name, a Scheduler subclass, or an
+    instance; instances are cloned per build (fresh()), so one IR node can
+    be lowered repeatedly."""
+    xs = list(range(120))
+    pol = WorkStealing(ring_fill=1)
+    skel = Farm(_f, 3, ordered=True, scheduling=pol)
+    prog = lower(skel, "threads")
+    assert prog(xs) == [_f(x) for x in xs]
+    assert prog(xs) == [_f(x) for x in xs]  # re-run: no leaked state
+    assert lower(Farm(_f, 3, ordered=True, scheduling=CostModel), "threads")(
+        xs) == [_f(x) for x in xs]
+    assert make_scheduler(pol) is not pol  # fresh clone
+    assert make_scheduler(pol).ring_fill == 1  # config preserved
+
+
+def test_unknown_policy_raises_value_error():
+    with pytest.raises(ValueError, match="scheduling policy"):
+        Farm(_f, 2, scheduling="bogus")
+    with pytest.raises(ValueError, match="scheduling policy"):
+        Feedback(_f, lambda x: False, scheduling="bogus")
+    with pytest.raises(ValueError, match="scheduling policy"):
+        TaskFarm(2, scheduling="bogus")
+    with pytest.raises(ValueError, match="scheduling"):
+        make_scheduler(42)
+
+
+def test_stage_route_value_error_and_scheduler_routing():
+    """StageVertex routes through the same scheduler objects as the farm
+    arbiter: unknown routes raise ValueError (not assert), and 'ondemand'
+    is a valid stage route."""
+    with pytest.raises(ValueError, match="route"):
+        StageVertex(FnNode(_f), route="bogus")
+    with pytest.raises(ValueError, match="pick"):
+        # token-holding policies need the farm dispatch arbiter; a stage
+        # route must reject them instead of silently degrading
+        StageVertex(FnNode(_f), route="worksteal")
+    v = StageVertex(FnNode(_f), route="ondemand")
+    assert isinstance(v._sched, OnDemand)
+    assert StageVertex(FnNode(_f), route="bcast")._sched is None
+    assert isinstance(StageVertex(FnNode(_f))._sched, RoundRobin)
+
+
+def test_worksteal_rebalances_around_slow_worker():
+    """One worker hangs on a slow task; with ring_fill=1 the remaining
+    stream stays in the arbiter backlog where idle workers steal it, so
+    the slow worker ends up servicing almost nothing else."""
+    class Worker(ff_node):
+        def __init__(self):
+            self.seen = 0
+
+        def svc(self, t):
+            self.seen += 1
+            if t == 0:
+                time.sleep(0.25)
+            return t
+
+    workers = [Worker() for _ in range(3)]
+    farm = Farm(workers, ordered=True,
+                scheduling=WorkStealing(ring_fill=1))
+    out = lower(farm, "threads")(range(60))
+    assert out == list(range(60))
+    assert farm.stats.steals > 0, "stealing never fired"
+    assert min(w.seen for w in workers) < 15, \
+        f"slow worker was not relieved: {[w.seen for w in workers]}"
+
+
+def test_worksteal_with_straggler_speculation_dedups():
+    """Steals and speculative re-issue compose: duplicates are dropped by
+    tag at the merge arbiter no matter which worker serviced them."""
+    def sometimes_slow(t):
+        if t == 5:
+            time.sleep(0.6)
+        return t
+
+    farm = Farm(sometimes_slow, 3, ordered=True, scheduling="worksteal",
+                speculative=True, straggler_factor=2.0,
+                min_straggler_age=0.05)
+    assert lower(farm, "threads")(range(30)) == list(range(30))
+    assert farm.stats.duplicates_issued >= 1
+
+
+def test_costmodel_uses_service_time_stats():
+    """Workers populate the per-worker service-time EWMA that the
+    CostModel policy reads."""
+    farm = Farm(_f, 3, ordered=True, scheduling="costmodel")
+    assert lower(farm, "threads")(range(90)) == [_f(x) for x in range(90)]
+    assert farm.stats.service_ewma, "workers must record service EWMAs"
+    assert all(v >= 0.0 for v in farm.stats.service_ewma.values())
+
+
+# -- grain-aware fusion -------------------------------------------------------
+def test_fusion_fewer_vertices_identical_output():
+    """Acceptance: a fused Pipeline(Stage, Stage) spawns fewer vertices
+    yet produces identical output."""
+    skel = Pipeline(Stage(_f, grain=1), Stage(_g, grain=1))
+    xs = list(range(300))
+    want = [_g(_f(x)) for x in xs]
+    unfused = lower(skel, "threads", fuse=False)
+    fused = lower(skel, "threads", fuse="auto", fuse_threshold_us=1e9)
+    assert unfused(xs) == fused(xs) == want
+    assert len(fused.to_graph(xs).vertices) < len(unfused.to_graph(xs).vertices)
+
+
+def test_fusion_respects_grain_threshold():
+    """Stages at or above the threshold (or with no declared grain) are
+    left alone by auto mode."""
+    coarse = Pipeline(Stage(_f, grain=500), Stage(_g, grain=500))
+    assert isinstance(fuse(coarse, threshold_us=10.0), Pipeline)
+    nograin = Pipeline(Stage(_f), Stage(_g))
+    assert isinstance(fuse(nograin, threshold_us=10.0), Pipeline)
+    fine = Pipeline(Stage(_f, grain=1), Stage(_g, grain=1))
+    assert isinstance(fuse(fine, threshold_us=10.0), Stage)
+    # merged grain is the sum, so a long run stops merging once coarse
+    run = Pipeline(*[Stage(_f, grain=6) for _ in range(4)])
+    fused = fuse(run, threshold_us=10.0)
+    assert isinstance(fused, Pipeline) and len(fused.stages) == 2
+
+
+def test_fusion_farm_absorbs_trailing_stage():
+    skel = Pipeline(Farm(_f, 3, ordered=True), Stage(_g, grain=1))
+    xs = list(range(200))
+    want = [_g(_f(x)) for x in xs]
+    unfused = lower(skel, "threads", fuse=False)
+    fused = lower(skel, "threads", fuse=True)
+    assert unfused(xs) == fused(xs) == want
+    assert len(fused.to_graph(xs).vertices) \
+        == len(unfused.to_graph(xs).vertices) - 1
+
+
+def test_fusion_never_absorbs_into_feedback_or_collector_farms():
+    """A wrap-around farm would re-apply the stage every loop trip; a
+    collector node would run on the wrong side of the stage.  Both stay
+    unfused even under force."""
+    def route(res):
+        x, d = res
+        return (x, []) if d == 0 else (None, [(x, d - 1)])
+
+    fb = Pipeline(Farm(lambda t: t, 2, feedback=route), Stage(_f, grain=1))
+    assert isinstance(fuse(fb, force=True), Pipeline)
+    coll = Pipeline(Farm(_f, 2, ordered=True, collector=FnNode(_g)),
+                    Stage(_g, grain=1))
+    assert isinstance(fuse(coll, force=True), Pipeline)
+
+    class Stateful(ff_node):
+        def svc(self, t):
+            return t
+
+    st_skel = Pipeline(Farm(_f, 2, ordered=True), Stage(Stateful(), grain=1))
+    assert isinstance(fuse(st_skel, force=True), Pipeline)
+
+
+def test_fused_node_chain_semantics():
+    """GO_ON / None filtering and EmitMany flattening behave exactly as
+    the separate vertices would."""
+    keep_even = lambda x: x if x % 2 == 0 else GO_ON
+    dup = lambda x: EmitMany([x, x + 100])
+    skel = Pipeline(Stage(keep_even, grain=1), Stage(dup, grain=1),
+                    Stage(_f, grain=1))
+    xs = list(range(20))
+    unfused = lower(skel, "threads", fuse=False)
+    fused = lower(skel, "threads", fuse=True)
+    out_u, out_f = unfused(xs), fused(xs)
+    assert out_u == out_f
+    assert out_f == [_f(v) for x in xs if x % 2 == 0 for v in (x, x + 100)]
+
+
+def test_fused_none_filters_do_not_diverge():
+    """None mid-pipeline filters one item on every path: in a fused stage
+    chain (a later node's None must NOT end the stream in source position)
+    and through a farm-absorbed tail (the merge arbiter delivers non-GO_ON
+    payloads, so the fused tail must filter its own Nones)."""
+    # farm + trailing None-filtering stage
+    skel = Pipeline(Farm(lambda x: x * 2, 2, ordered=True),
+                    Stage(lambda x: x if x % 4 == 0 else None, grain=1))
+    xs = list(range(6))
+    assert lower(skel, "threads", fuse=False)(xs) \
+        == lower(skel, "threads", fuse=True)(xs) == [0, 4, 8]
+
+    # fused source: the generator's None is EOS, the filter's None is not
+    def src():  # fresh generator state per lowering
+        it = iter(range(5))
+        return Pipeline(Stage(lambda _: next(it, None), grain=1),
+                        Stage(lambda x: x if x != 2 else None, grain=1))
+
+    want = [0, 1, 3, 4]
+    assert lower(src(), "threads", fuse=False).to_graph().run_and_wait() == want
+    assert lower(src(), "threads", fuse=True).to_graph().run_and_wait() == want
+
+
+def test_double_absorbed_stages_keep_emit_many_flattening():
+    """Two stages absorbed into one farm: EmitMany between the absorbed
+    stages still flattens (stage-to-stage semantics inside the tail)."""
+    skel = Pipeline(Farm(_f, 2, ordered=True),
+                    Stage(lambda x: EmitMany([x, -x]), grain=1),
+                    Stage(lambda x: x + 1000, grain=1))
+    xs = list(range(10))
+    un = lower(skel, "threads", fuse=False)
+    fu = lower(skel, "threads", fuse=True)
+    assert un(xs) == fu(xs)
+    assert len(fu.to_graph(xs).vertices) \
+        == len(un.to_graph(xs).vertices) - 2
+
+
+def test_worksteal_backlog_bounded_by_high_water():
+    """The arbiter-side backlog must not buffer an unbounded stream: with
+    slow workers, pending() stays at or below the policy's high-water mark
+    while the source blocks behind it."""
+    import threading
+    from repro.core.graph import DispatchVertex
+
+    pol = WorkStealing(ring_fill=2)
+    seen_pending = []
+    orig = DispatchVertex._dispatch
+
+    def spy(self, task):
+        orig(self, task)
+        seen_pending.append(self.sched.pending())
+
+    farm = Farm(lambda x: (time.sleep(0.0005), x)[1], 2,
+                scheduling=pol, capacity=4)
+    DispatchVertex._dispatch = spy
+    try:
+        out = lower(farm, "threads")(range(3000))
+    finally:
+        DispatchVertex._dispatch = orig
+    assert sorted(out) == list(range(3000))
+    hw = max(64, 8 * 2 * 2)
+    assert max(seen_pending) <= hw, \
+        f"backlog exceeded high water: {max(seen_pending)} > {hw}"
+
+
+def test_fused_node_lifecycle_hooks_run_once_each():
+    calls = []
+
+    class N(ff_node):
+        def __init__(self, tag):
+            self.tag = tag
+
+        def svc_init(self):
+            calls.append(("init", self.tag))
+
+        def svc(self, t):
+            return t
+
+        def svc_end(self):
+            calls.append(("end", self.tag))
+
+    skel = Pipeline(Stage(N("a"), grain=1), Stage(N("b"), grain=1))
+    assert lower(skel, "threads", fuse=True)([1, 2]) == [1, 2]
+    assert calls == [("init", "a"), ("init", "b"), ("end", "b"), ("end", "a")]
+
+
+def test_fusion_auto_calibration_is_cached():
+    from repro.core.sched import calibrate_handoff_us
+    a = calibrate_handoff_us(ntasks=300, force=True)
+    b = calibrate_handoff_us()
+    assert a == b and a > 0.0
+
+
+# -- bounded latency reservoir ------------------------------------------------
+def test_latency_reservoir_bounded_with_correct_p95():
+    stats = FarmStats()
+    assert stats.p95_latency() == 0.0  # empty sample is safe
+    for i in range(10_000):
+        stats.latencies.append(float(i))
+    assert len(stats.latencies) <= 2048, "reservoir must be bounded"
+    assert stats.latencies.count == 10_000
+    # the window holds the most recent values, so p95 is near the top
+    assert 10_000 - 2048 <= stats.p95_latency() < 10_000
+
+    small = LatencyReservoir(cap=4)
+    for v in (1.0, 2.0):
+        small.append(v)
+    assert sorted(small) == [1.0, 2.0]
+    for v in (3.0, 4.0, 5.0, 6.0):
+        small.append(v)
+    assert sorted(small) == [3.0, 4.0, 5.0, 6.0]  # oldest overwritten
+
+
+def test_long_farm_run_keeps_latency_sample_bounded():
+    farm = Farm(lambda x: x, 2, ordered=True)
+    n = 6_000
+    assert lower(farm, "threads")(range(n)) == list(range(n))
+    assert farm.stats.tasks_collected == n
+    assert len(farm.stats.latencies) <= 2048
+    assert farm.stats.latencies.count == n
