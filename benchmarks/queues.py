@@ -1,19 +1,32 @@
-"""Queue primitive overhead (substrate of paper Fig. 6).
+"""Queue primitive overhead (substrate of paper Fig. 6, plus the Fig. 5
+hand-off analogue across process boundaries).
 
 Measures per-operation cost of the paper's lock-free SPSC ring vs the
-lock-based MPMC baseline, single-threaded (pure op cost) and across a
-2-thread producer/consumer stream (hand-off cost).  The absolute numbers
-are Python-level; the paper's *claim* is the relative ordering
-(SPSC < lock-based), which is what the derived column reports.
+lock-based MPMC baseline, three ways:
+
+* single-threaded push/pop (pure op cost);
+* a 2-thread producer/consumer stream (in-process hand-off cost:
+  ``SPSCQueue`` vs ``LockQueue``);
+* a 2-**process** producer/consumer stream (cross-process hand-off cost:
+  the shared-memory ``ShmRing`` vs ``multiprocessing.Queue``, the
+  lock-and-pipe baseline every Python program reaches for).  The threaded
+  ``LockQueue`` number is carried into the derived column as the
+  reference point the paper's Fig. 5 uses.
+
+The absolute numbers are Python-level; the paper's *claim* is the
+relative ordering (lock-free SPSC < locked), which is what the derived
+columns report — now on both sides of the process boundary.
 """
 from __future__ import annotations
 
+import multiprocessing as mp
 import threading
 import time
 
-from repro.core import EOS, LockQueue, SPSCQueue
+from repro.core import EOS, LockQueue, ShmRing, SPSCQueue
 
 N = 200_000
+N_XPROC = 20_000
 
 
 def _ops_per_sec_single(qcls) -> float:
@@ -50,6 +63,68 @@ def _stream_us_per_item(qcls, n=100_000) -> float:
     return dt / n * 1e6
 
 
+# -- cross-process hand-off (the procs backend's edge primitive) -------------
+def _shm_consumer(ring, reply):
+    reply.put("up")  # warm-up ack: spawn/import cost ends HERE
+    c = 0
+    while True:
+        item = ring.pop_wait()
+        if item is EOS:
+            break
+        c += 1
+    reply.put(c)
+
+
+def _mpq_consumer(q, reply):
+    reply.put("up")
+    c = 0
+    while True:
+        item = q.get()
+        if item is EOS:
+            break
+        c += 1
+    reply.put(c)
+
+
+def _xproc_us_per_item(kind: str, n=None) -> float:
+    """Parent producer -> spawned child consumer, n items + EOS.  The
+    clock starts only after the child's ready handshake, so spawn and
+    import cost never inflate the per-item figure."""
+    n = N_XPROC if n is None else n  # read at call time: CI shrinks it
+    ctx = mp.get_context("spawn")
+    reply = ctx.Queue()
+    if kind == "shm":
+        chan = ShmRing(1024)
+        p = ctx.Process(target=_shm_consumer, args=(chan, reply), daemon=True)
+
+        def push(item):  # a consumer that dies mid-stream must fail fast,
+            if not chan.push_wait(item, timeout=120):  # not wedge the run
+                raise RuntimeError("shm consumer stalled")
+    else:
+        chan = ctx.Queue(1024)
+        p = ctx.Process(target=_mpq_consumer, args=(chan, reply), daemon=True)
+
+        def push(item):
+            chan.put(item, timeout=120)  # queue.Full on a stalled consumer
+    p.start()
+    try:
+        assert reply.get(timeout=120) == "up"  # dead child fails, not hangs
+        t0 = time.perf_counter()
+        for i in range(n):
+            push(i)
+        push(EOS)
+        got = reply.get(timeout=120)
+        dt = time.perf_counter() - t0
+        p.join(30)
+        assert got == n
+    finally:
+        if p.is_alive():
+            p.terminate()
+        if kind == "shm":
+            chan.unlink()
+    return dt / n * 1e6
+
+
 def run(emit):
     for qcls, name in [(SPSCQueue, "spsc"), (LockQueue, "lock")]:
         ops = _ops_per_sec_single(qcls)
@@ -58,3 +133,9 @@ def run(emit):
     lock_us = _stream_us_per_item(LockQueue)
     emit("queue_stream_spsc", spsc_us, f"lock_over_spsc={lock_us/spsc_us:.2f}x")
     emit("queue_stream_lock", lock_us, "")
+    shm_us = _xproc_us_per_item("shm")
+    mpq_us = _xproc_us_per_item("mpq")
+    emit("queue_xproc_shm", shm_us,
+         f"mpq_over_shm={mpq_us/shm_us:.2f}x "
+         f"threadlock_over_shm={lock_us/shm_us:.2f}x")
+    emit("queue_xproc_mpq", mpq_us, "")

@@ -1,11 +1,15 @@
 """Benchmark harness — one module per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement):
-  queues.py           — SPSC vs lock queue op cost (substrate of Fig. 6)
+  queues.py           — SPSC vs lock queue op cost (substrate of Fig. 6),
+                        in-process and across a spawn boundary (shm ring
+                        vs multiprocessing.Queue — the Fig. 5 analogue)
   farm_overhead.py    — Fig. 6: farm overhead vs grain, derived speedup model
   farm_composition.py — graph runtime: pipeline-of-farms + feedback overhead
   skeleton_parity.py  — skeleton IR: same skeleton on both backends
   sched_policies.py   — scheduling policies × grain on a skewed farm + fusion
+  proc_farm.py        — threads-vs-procs farm speedup over grain (the
+                        GIL-escape curve of the procs backend)
   smith_waterman.py   — Fig. 7 + Table 1: SW database search GCUPS
   roofline.py         — EXPERIMENTS §Roofline terms from the dry-run artifacts
 
@@ -35,9 +39,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from . import (queues, farm_overhead, farm_composition, skeleton_parity,
-                   sched_policies, smith_waterman, roofline)
+                   sched_policies, proc_farm, smith_waterman, roofline)
     for mod in (queues, farm_overhead, farm_composition, skeleton_parity,
-                sched_policies, smith_waterman, roofline):
+                sched_policies, proc_farm, smith_waterman, roofline):
         mod.run(_emit)
     _emit("total_bench_wall", (time.time() - t0) * 1e6, "")
 

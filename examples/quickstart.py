@@ -1,80 +1,112 @@
-"""Quickstart: the three layers of FastFlow-JAX in ~80 lines.
+"""Quickstart: the three layers of FastFlow-JAX in ~100 lines.
 
-  1. the skeleton IR: ONE declarative expression, executed on BOTH
-     backends — the host thread/SPSC graph and a single shard_map mesh
-     program (no host hop between stages); plus the threads backend's
-     pluggable scheduling policies (Farm(scheduling=...)) and the
-     grain-aware fusion pass (lower(..., fuse=...));
+  1. the skeleton IR: ONE declarative expression, executed on THREE
+     backends — the host thread/SPSC graph, the GIL-escaping process
+     graph over shared-memory rings, and a single shard_map mesh program
+     (no host hop between stages); plus the threads backend's pluggable
+     scheduling policies (Farm(scheduling=...)) and the grain-aware
+     fusion pass (lower(..., fuse=...));
   2. the paper's application: Smith-Waterman database search through an
      ordered farm;
   3. the LM framework: one reduced-config train step + one decode step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Structure note: the procs backend spawns vertex processes, and spawn
+re-imports this script in every child — so the worker functions live at
+module level (picklable by name), the heavy imports live inside main(),
+and everything executable is behind ``if __name__ == "__main__"``.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCHS
-from repro.core import CostModel, Farm, Pipeline, Stage, lower
-from repro.kernels import ops
-from repro.launch.steps import make_train_step
-from repro.models import init_cache, init_params, decode_step
-from repro.optim import adamw_init
 
-# -- 1. one skeleton, two backends -------------------------------------------
-# Pipeline(Farm(f), Farm(g)) is pure data; lower() picks the runtime.
-skel = Pipeline(Farm(lambda x: x * x, 4, ordered=True),
-                Farm(lambda x: x + 1, 4, ordered=True))
-on_threads = lower(skel, "threads")(range(10))  # threads + SPSC rings
-on_mesh = lower(skel, "mesh")(range(10))        # ONE shard_map: farms fused
-print("threads:", on_threads)
-print("mesh:   ", on_mesh)
-assert on_threads == on_mesh
+# -- picklable nodes for the procs backend (children import these by name) ----
+def _sq(x):
+    return x * x
 
-# -- 1b. scheduling policies + grain-aware fusion (threads backend) ----------
-# Farm(scheduling=) takes a registry name — "rr" | "ondemand" | "worksteal"
-# | "costmodel" — or a repro.core.sched.Scheduler instance; placement never
-# changes ordered-farm output, only who services what.
-stolen = lower(Farm(lambda x: x * x, 4, ordered=True,
-                    scheduling="worksteal"), "threads")(range(10))
-priced = lower(Farm(lambda x: x * x, 4, ordered=True,
-                    scheduling=CostModel()), "threads")(range(10))
-assert stolen == priced == [x * x for x in range(10)]
-print("worksteal == costmodel:", stolen)
 
-# Stages declaring a fine grain= (µs of work per item, threads reading)
-# fuse into ONE vertex when the grain is below the calibrated hand-off
-# cost — fewer threads, fewer ring hops, identical output.
-fine = Pipeline(Stage(lambda x: x + 1, grain=1), Stage(lambda x: x * 2, grain=1))
-fused = lower(fine, "threads", fuse="auto", fuse_threshold_us=1e9)
-unfused = lower(fine, "threads", fuse=False)
-assert fused(range(8)) == unfused(range(8))
-print("fusion: vertices", len(unfused.to_graph(list(range(8))).vertices),
-      "->", len(fused.to_graph(list(range(8))).vertices))
+def _inc(x):
+    return x + 1
 
-# -- 2. the paper's app: SW database search (host-only payloads) --------------
-rng = np.random.default_rng(0)
-query = jnp.asarray(rng.integers(0, 20, 32), jnp.int32)
-db = [jnp.asarray(rng.integers(0, 20, int(n)), jnp.int32)
-      for n in rng.integers(20, 80, 8)]
-sw = Farm(lambda s: float(ops.smith_waterman(query, s, tile=64)), 2,
-          ordered=True)
-print("SW scores:", lower(sw, "threads")(db))
 
-# -- 3. LM framework: one train step + one decode step (reduced config) ------
-cfg = ARCHS["mixtral-8x7b"].smoke()
-key = jax.random.PRNGKey(0)
-params = init_params(cfg, key)
-opt = adamw_init(params)
-step = jax.jit(make_train_step(cfg))
-batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),
-         "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
-params, opt, metrics = step(params, opt, batch)
-print(f"train step: loss={float(metrics['loss']):.3f}")
+def main():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
-cache = init_cache(cfg, batch=2, max_len=16)
-logits, cache = jax.jit(lambda p, b, c, l: decode_step(p, b, c, l, cfg))(
-    params, {"tokens": jnp.zeros((2, 1), jnp.int32)}, cache, jnp.int32(0))
-print("decode logits:", logits.shape)
-print("quickstart OK")
+    from repro.configs import ARCHS
+    from repro.core import CostModel, Farm, Pipeline, Stage, lower
+    from repro.kernels import ops
+    from repro.launch.steps import make_train_step
+    from repro.models import init_cache, init_params, decode_step
+    from repro.optim import adamw_init
+
+    # -- 1. one skeleton, two backends ---------------------------------------
+    # Pipeline(Farm(f), Farm(g)) is pure data; lower() picks the runtime.
+    skel = Pipeline(Farm(_sq, 4, ordered=True), Farm(_inc, 4, ordered=True))
+    on_threads = lower(skel, "threads")(range(10))  # threads + SPSC rings
+    on_mesh = lower(skel, "mesh")(range(10))        # ONE shard_map: fused
+    print("threads:", on_threads)
+    print("mesh:   ", on_mesh)
+    assert on_threads == on_mesh
+
+    # -- 1b. scheduling policies + grain-aware fusion (threads backend) ------
+    # Farm(scheduling=) takes a registry name — "rr" | "ondemand" |
+    # "worksteal" | "costmodel" — or a repro.core.sched.Scheduler instance;
+    # placement never changes ordered-farm output, only who services what.
+    stolen = lower(Farm(_sq, 4, ordered=True,
+                        scheduling="worksteal"), "threads")(range(10))
+    priced = lower(Farm(_sq, 4, ordered=True,
+                        scheduling=CostModel()), "threads")(range(10))
+    assert stolen == priced == [_sq(x) for x in range(10)]
+    print("worksteal == costmodel:", stolen)
+
+    # Stages declaring a fine grain= (µs of work per item, threads reading)
+    # fuse into ONE vertex when the grain is below the calibrated hand-off
+    # cost — fewer threads, fewer ring hops, identical output.
+    fine = Pipeline(Stage(_inc, grain=1), Stage(_sq, grain=1))
+    fused = lower(fine, "threads", fuse="auto", fuse_threshold_us=1e9)
+    unfused = lower(fine, "threads", fuse=False)
+    assert fused(range(8)) == unfused(range(8))
+    print("fusion: vertices", len(unfused.to_graph(list(range(8))).vertices),
+          "->", len(fused.to_graph(list(range(8))).vertices))
+
+    # -- 1c. the SAME skeleton on the procs backend (GIL escape) -------------
+    # lower(skel, "procs") spawns one process per vertex and replaces every
+    # edge with a shared-memory SPSC ring (cache-line-separated head/tail —
+    # the paper's FastForward layout, finally observable without the GIL).
+    # Identical ordered output, but a farm of pure-Python svc functions now
+    # actually scales with cores; nodes must be picklable (module-level
+    # functions like _sq/_inc, not lambdas).
+    on_procs = lower(skel, "procs")(range(10))
+    print("procs:  ", on_procs)
+    assert on_procs == on_threads == on_mesh
+
+    # -- 2. the paper's app: SW database search (host-only payloads) ---------
+    rng = np.random.default_rng(0)
+    query = jnp.asarray(rng.integers(0, 20, 32), jnp.int32)
+    db = [jnp.asarray(rng.integers(0, 20, int(n)), jnp.int32)
+          for n in rng.integers(20, 80, 8)]
+    sw = Farm(lambda s: float(ops.smith_waterman(query, s, tile=64)), 2,
+              ordered=True)
+    print("SW scores:", lower(sw, "threads")(db))
+
+    # -- 3. LM framework: one train step + one decode step (reduced config) --
+    cfg = ARCHS["mixtral-8x7b"].smoke()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg))
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
+    params, opt, metrics = step(params, opt, batch)
+    print(f"train step: loss={float(metrics['loss']):.3f}")
+
+    cache = init_cache(cfg, batch=2, max_len=16)
+    logits, cache = jax.jit(lambda p, b, c, l: decode_step(p, b, c, l, cfg))(
+        params, {"tokens": jnp.zeros((2, 1), jnp.int32)}, cache, jnp.int32(0))
+    print("decode logits:", logits.shape)
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

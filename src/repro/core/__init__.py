@@ -1,10 +1,19 @@
 # The paper's primary contribution: FastFlow's lock-free streaming layer as
-# ONE skeleton vocabulary (skeleton.py: Pipeline/Farm/Feedback IR) with two
-# backends — host flavour (threads + Lamport SPSC rings + the graph runtime)
-# and device flavour (one shard_map mesh program over collective-permute
-# SPSC channels).  `lower(skel, backend=...)` picks the runtime.
+# ONE skeleton vocabulary (skeleton.py: Pipeline/Farm/Feedback IR) with three
+# backends — host thread flavour (threads + Lamport SPSC rings + the graph
+# runtime), host process flavour (spawned vertices over shared-memory SPSC
+# rings — the GIL-escaping procs backend), and device flavour (one shard_map
+# mesh program over collective-permute SPSC channels).
+# `lower(skel, backend=...)` picks the runtime.
+#
+# The device-side modules (dchannel/dfarm/dpipeline) import JAX, which costs
+# seconds of interpreter start-up; the procs backend spawns one process per
+# vertex and every child imports this package.  Those modules are therefore
+# loaded lazily (PEP 562): `from repro.core import farm_map` still works, but
+# a vertex process that only needs the host runtime never pays for XLA.
 from .spsc import EOS, SPSCQueue
 from .lockq import LockQueue
+from .shm import ShmCounters, ShmRing
 from .sched import (SCHEDULERS, CostModel, OnDemand, RoundRobin, Scheduler,
                     WorkStealing, calibrate_handoff_us, make_scheduler)
 from .skeleton import (GO_ON, EmitMany, Farm, FarmStats, Feedback, FnNode,
@@ -13,26 +22,43 @@ from .skeleton import (GO_ON, EmitMany, Farm, FarmStats, Feedback, FnNode,
                        Skeleton, Source, Stage, ThreadProgram, as_skeleton,
                        compose, ff_node, fuse, lower)
 from .graph import Accelerator, Graph, Net, Token, build
+from .procgraph import ProcAccelerator, ProcGraph, ProcProgram
 from .farm import TaskFarm
 from .allocator import PagePool, PoolExhausted
 from .mdf import MDFExecutor, MDFTask
-from .dchannel import RingChannel, chain_send, double_buffered_ring, ring_send
-from .dfarm import combine, dispatch, farm_map, farm_until, roundrobin_dest
-from .dpipeline import negotiate_stage_axis, pipeline_apply, pipeline_utilisation
+
+# device-flavour names, resolved on first touch (see module docstring)
+_LAZY = {
+    "RingChannel": ".dchannel", "chain_send": ".dchannel",
+    "double_buffered_ring": ".dchannel", "ring_send": ".dchannel",
+    "combine": ".dfarm", "dispatch": ".dfarm", "farm_map": ".dfarm",
+    "farm_until": ".dfarm", "roundrobin_dest": ".dfarm",
+    "negotiate_stage_axis": ".dpipeline", "pipeline_apply": ".dpipeline",
+    "pipeline_utilisation": ".dpipeline",
+}
 
 __all__ = [
-    "EOS", "SPSCQueue", "LockQueue",
+    "EOS", "SPSCQueue", "LockQueue", "ShmRing", "ShmCounters",
     "GO_ON", "EmitMany", "Accelerator", "Farm", "Feedback", "Graph", "Net",
     "Pipeline",
     "Skeleton", "Source", "Stage", "Token", "compose",
     "LoweringError", "MeshProgram", "ThreadProgram", "as_skeleton", "build",
     "lower", "fuse", "FusedNode",
+    "ProcAccelerator", "ProcGraph", "ProcProgram",
     "SCHEDULERS", "Scheduler", "RoundRobin", "OnDemand", "WorkStealing",
     "CostModel", "make_scheduler", "calibrate_handoff_us",
     "FarmStats", "LatencyReservoir", "FnNode", "TaskFarm", "ff_node",
     "PagePool", "PoolExhausted",
     "MDFExecutor", "MDFTask",
-    "RingChannel", "chain_send", "double_buffered_ring", "ring_send",
-    "combine", "dispatch", "farm_map", "farm_until", "roundrobin_dest",
-    "negotiate_stage_axis", "pipeline_apply", "pipeline_utilisation",
-]
+] + sorted(_LAZY)
+
+
+def __getattr__(name):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(target, __name__), name)
+    globals()[name] = value  # cache: next access skips this hook
+    return value

@@ -114,6 +114,18 @@ class Scheduler:
     def pending(self) -> int:
         return 0
 
+    def observe_service(self, index: int, ewma: float) -> None:
+        """Fold one worker's service-time EWMA into the policy's stats.
+
+        On the threads backend workers write ``FarmStats.service_ewma``
+        directly (single writer per key).  The procs backend has no shared
+        ``FarmStats`` object, so workers stream their EWMA over a
+        worker→arbiter SPSC ring and the dispatch arbiter feeds it in
+        here — arbiter-side state stays in the arbiter's process, and
+        policies like :class:`CostModel` read the same dict either way."""
+        if self.stats is not None:
+            self.stats.service_ewma[index] = ewma
+
 
 class RoundRobin(Scheduler):
     """The paper's default emitter policy: worker ``i mod N`` (Fig. 1-2)."""

@@ -1,0 +1,326 @@
+"""Lock-free SPSC ring over OS shared memory — the paper's queue, off-GIL.
+
+``spsc.py`` is the Lamport/FastForward ring for one *process*: correct
+under exactly one producer thread and one consumer thread, with CPython's
+GIL standing in for x86 store ordering.  This module is the same algorithm
+over ``multiprocessing.shared_memory``, so producer and consumer can be
+separate *processes* — which is where the paper's speedup story finally
+applies to pure-Python stages (a thread farm of GIL-holding ``svc``
+functions serialises; a process farm does not; see ``procgraph.py``).
+
+What is byte-for-byte faithful to the paper here (Sec. 3.1, after
+Giacomoni et al.'s FastForward, PPoPP'08):
+
+* **single-writer counters** — ``head`` is written only by the consumer,
+  ``tail`` only by the producer; each side reads the other's counter
+  benignly stale.  No locks, no CAS, no fetch-and-add on the data path.
+* **cache-line separation** — head and tail live 64 bytes apart in the
+  shared segment (offsets 0 and 64; slots start at 128 and each slot is
+  padded to a cache-line multiple), so the two cores never false-share a
+  line.  In ``spsc.py`` this discipline "has no observable analogue";
+  here it is real: both counters are plain 8-byte stores into mapped
+  memory with no interpreter lock between the cores.
+* **publication order** — the producer writes the payload *then* the
+  tail; the consumer reads the payload *then* the head.  CPython emits
+  these as ordinary stores in program order; x86-TSO keeps them ordered,
+  exactly the assumption the paper makes for its fence-free queue.
+
+Payloads are pickled into fixed-size slots.  An item whose pickle exceeds
+the slot goes through the **spill side-channel**: the producer writes the
+blob to a private spill file (named by the ring + a producer-owned
+sequence number — still single-writer) and the slot carries only the
+sequence number; the consumer reads and deletes the file.  The ring stays
+wait-free for the common case and merely degrades to file I/O for the
+rare oversized item.
+
+``push``/``pop`` are non-blocking; ``push_wait``/``pop_wait`` spin with
+the same exponential yield backoff as ``SPSCQueue``, and the ``EOS``
+sentinel pickles to the canonical instance on the far side
+(``_EOS.__reduce__``), so the two rings are drop-in interchangeable.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import pickle
+import struct
+import tempfile
+import time
+from typing import Any, Optional
+
+from multiprocessing import shared_memory
+
+from .spsc import EOS, SPSCQueue  # noqa: F401  (EOS re-exported: ring protocol)
+
+__all__ = ["ShmRing", "ShmCounters", "EOS"]
+
+_CACHE_LINE = 64
+_HEAD_OFF = 0            # consumer-written counter, own cache line
+_TAIL_OFF = _CACHE_LINE  # producer-written counter, own cache line
+_DATA_OFF = 2 * _CACHE_LINE
+_SLOT_HDR = struct.Struct("<IB3x")  # payload length, kind (inline/spill)
+_KIND_INLINE = 0
+_KIND_SPILL = 1
+_PICKLE_PROTO = pickle.HIGHEST_PROTOCOL  # sentinel __reduce__ needs >= 2
+_POLL = 0.000_05   # blocking-helper backoff (matches SPSCQueue)
+
+
+def _spill_dir() -> str:
+    return tempfile.gettempdir()
+
+
+class ShmRing:
+    """Bounded wait-free SPSC FIFO in a ``SharedMemory`` segment.
+
+    ``capacity`` is rounded up to a power of two minus the one sacrificial
+    Lamport slot, exactly like ``SPSCQueue``; ``slot_size`` is the inline
+    payload budget per slot (larger pickles spill, see module docstring).
+
+    The creating process *owns* the segment: only ``unlink()`` from the
+    owner destroys it (and sweeps leftover spill files).  The object
+    pickles as an **attach**: sending a ring to a spawned child re-opens
+    the same segment by name, which is how ``procgraph`` wires edges.
+    ``pushes``/``pops`` are endpoint-local telemetry (each side counts its
+    own operations; they are not shared state).
+    """
+
+    def __init__(self, capacity: int = 512, slot_size: int = 248, *,
+                 name: Optional[str] = None, _attach: bool = False):
+        if capacity < 2:
+            capacity = 2
+        size = 1
+        while size < capacity + 1:
+            size <<= 1
+        self._mask = size - 1
+        self.slot_size = slot_size
+        self._stride = -(-(_SLOT_HDR.size + slot_size) // _CACHE_LINE) \
+            * _CACHE_LINE
+        nbytes = _DATA_OFF + size * self._stride
+        if _attach:
+            self._shm = shared_memory.SharedMemory(name=name)
+            self.owner = False
+        else:
+            self._shm = shared_memory.SharedMemory(
+                create=True, size=nbytes, name=name)
+            self.owner = True
+        self.name = self._shm.name
+        self._mv = self._shm.buf
+        self._idx = self._mv.cast("Q")  # [0] = head, [8] = tail (64B apart)
+        if self.owner:
+            self._idx[_HEAD_OFF // 8] = 0
+            self._idx[_TAIL_OFF // 8] = 0
+        self._spill_seq = 0  # producer-private; consumer tracks via slots
+        self.pushes = 0
+        self.pops = 0
+        self._closed = False
+
+    # -- pickling = attach (how edges reach spawned vertices) ---------------
+    def __reduce__(self):
+        return (_attach_ring, (self.name, self._mask, self.slot_size))
+
+    # -- introspection (either side; cross-side values benignly stale) ------
+    def __len__(self) -> int:
+        return (self._idx[_TAIL_OFF // 8] - self._idx[_HEAD_OFF // 8]) \
+            & self._mask
+
+    @property
+    def capacity(self) -> int:
+        return self._mask  # one slot reserved (Lamport full/empty)
+
+    def empty(self) -> bool:
+        return self._idx[_HEAD_OFF // 8] == self._idx[_TAIL_OFF // 8]
+
+    def full(self) -> bool:
+        return ((self._idx[_TAIL_OFF // 8] + 1) & self._mask) \
+            == self._idx[_HEAD_OFF // 8]
+
+    # -- producer side ------------------------------------------------------
+    def _spill_path(self, seq: int) -> str:
+        return os.path.join(_spill_dir(),
+                            f"ffshm-{self.name.lstrip('/')}-{seq}.spill")
+
+    def push(self, item: Any) -> bool:
+        """Non-blocking enqueue. Returns False when full. Producer-only."""
+        idx = self._idx
+        tail = idx[_TAIL_OFF // 8]
+        nxt = (tail + 1) & self._mask
+        if nxt == idx[_HEAD_OFF // 8]:
+            return False
+        blob = pickle.dumps(item, _PICKLE_PROTO)
+        base = _DATA_OFF + (tail & self._mask) * self._stride
+        if len(blob) <= self.slot_size:
+            _SLOT_HDR.pack_into(self._mv, base, len(blob), _KIND_INLINE)
+            self._mv[base + _SLOT_HDR.size:base + _SLOT_HDR.size + len(blob)] \
+                = blob
+        else:
+            # spill side-channel: blob to a producer-owned file, slot
+            # carries the sequence number (file is durable before the
+            # tail store below publishes the slot)
+            seq = self._spill_seq
+            self._spill_seq += 1
+            with open(self._spill_path(seq), "wb") as f:
+                f.write(blob)
+            _SLOT_HDR.pack_into(self._mv, base, 8, _KIND_SPILL)
+            struct.pack_into("<Q", self._mv, base + _SLOT_HDR.size, seq)
+        idx[_TAIL_OFF // 8] = nxt  # publish AFTER the payload (order matters)
+        self.pushes += 1
+        return True
+
+    def push_wait(self, item: Any, timeout: Optional[float] = None) -> bool:
+        """Blocking enqueue with spin/yield backoff."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        spins = 0
+        while not self.push(item):
+            spins += 1
+            if spins > 64:
+                time.sleep(_POLL)
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+        return True
+
+    # -- consumer side ------------------------------------------------------
+    def pop(self) -> Any:
+        """Non-blocking dequeue. Returns ``SPSCQueue._EMPTY`` when empty."""
+        idx = self._idx
+        head = idx[_HEAD_OFF // 8]
+        if head == idx[_TAIL_OFF // 8]:
+            return SPSCQueue._EMPTY
+        base = _DATA_OFF + (head & self._mask) * self._stride
+        length, kind = _SLOT_HDR.unpack_from(self._mv, base)
+        raw = bytes(self._mv[base + _SLOT_HDR.size:
+                             base + _SLOT_HDR.size + length])
+        if kind == _KIND_SPILL:
+            seq = struct.unpack("<Q", raw)[0]
+            path = self._spill_path(seq)
+            with open(path, "rb") as f:
+                raw = f.read()
+            os.unlink(path)
+        item = pickle.loads(raw)
+        idx[_HEAD_OFF // 8] = (head + 1) & self._mask  # release AFTER reading
+        self.pops += 1
+        return item
+
+    def pop_wait(self, timeout: Optional[float] = None) -> Any:
+        """Blocking dequeue with spin/yield backoff.
+
+        Returns ``SPSCQueue._EMPTY`` on timeout.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        spins = 0
+        while True:
+            item = self.pop()
+            if item is not SPSCQueue._EMPTY:
+                return item
+            spins += 1
+            if spins > 64:
+                time.sleep(_POLL)
+            if deadline is not None and time.monotonic() > deadline:
+                return SPSCQueue._EMPTY
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        """Drop this process's mapping (the segment survives for peers)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._idx.release()
+        self._mv = None
+        self._shm.close()
+
+    def __del__(self):
+        # release the cast view before SharedMemory's own __del__ runs, or
+        # its close() raises BufferError ("exported pointers exist")
+        try:
+            self.close()
+        except Exception:  # pragma: no cover - interpreter-shutdown races
+            pass
+
+    def unlink(self) -> None:
+        """Owner-only: destroy the segment and sweep leftover spill files."""
+        self.close()
+        if not self.owner:
+            return
+        for path in glob.glob(os.path.join(
+                _spill_dir(), f"ffshm-{self.name.lstrip('/')}-*.spill")):
+            try:
+                os.unlink(path)
+            except OSError:  # pragma: no cover - another sweep won the race
+                pass
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:  # pragma: no cover - already unlinked
+            pass
+
+
+def _attach_ring(name: str, mask: int, slot_size: int) -> ShmRing:
+    ring = ShmRing.__new__(ShmRing)
+    ShmRing.__init__(ring, mask, slot_size, name=name, _attach=True)
+    return ring
+
+
+class ShmCounters:
+    """``n`` single-writer u64 counters, one per cache line, in shared
+    memory — the cross-process analogue of ``TagSpace``'s split counters.
+
+    ``procgraph`` uses a 2-counter board per wrap-around farm: slot 0
+    (``entered``) is written only by the dispatch arbiter, slot 1
+    (``retired``) only by the merge arbiter; each side reads the other's
+    slot benignly stale, with the same store-ordering argument as the
+    ring (the merge arbiter pushes looped-back tasks *before* bumping
+    ``retired``, so the dispatcher's quiescence check stays race-free).
+    """
+
+    def __init__(self, n: int = 2, *, name: Optional[str] = None,
+                 _attach: bool = False):
+        self.n = n
+        if _attach:
+            self._shm = shared_memory.SharedMemory(name=name)
+            self.owner = False
+        else:
+            self._shm = shared_memory.SharedMemory(
+                create=True, size=n * _CACHE_LINE)
+            self.owner = True
+        self.name = self._shm.name
+        self._idx = self._shm.buf.cast("Q")
+        if self.owner:
+            for i in range(n):
+                self._idx[i * (_CACHE_LINE // 8)] = 0
+        self._closed = False
+
+    def __reduce__(self):
+        return (_attach_counters, (self.name, self.n))
+
+    def get(self, i: int) -> int:
+        return self._idx[i * (_CACHE_LINE // 8)]
+
+    def add(self, i: int, delta: int = 1) -> None:
+        """Single-writer increment (exactly one process may write slot i)."""
+        off = i * (_CACHE_LINE // 8)
+        self._idx[off] = self._idx[off] + delta
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._idx.release()
+        self._shm.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:  # pragma: no cover - interpreter-shutdown races
+            pass
+
+    def unlink(self) -> None:
+        self.close()
+        if self.owner:
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:  # pragma: no cover
+                pass
+
+
+def _attach_counters(name: str, n: int) -> ShmCounters:
+    board = ShmCounters.__new__(ShmCounters)
+    ShmCounters.__init__(board, n, name=name, _attach=True)
+    return board

@@ -105,6 +105,12 @@ class _GoOn:
             cls._instance = super().__new__(cls)
         return cls._instance
 
+    def __reduce__(self):
+        # identity survives pickling (same contract as _EOS: a worker
+        # process returning GO_ON must satisfy `payload is GO_ON` in the
+        # merge arbiter's process)
+        return (_GoOn, ())
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return "<GO_ON>"
 
@@ -463,6 +469,56 @@ class _ReorderNode(ff_node):
         return out if out else GO_ON
 
 
+# Loop-plumbing nodes for Feedback.as_thread_net.  These are classes (not
+# closures) so the lowered net is picklable: the procs backend ships each
+# vertex to a spawned process, and every piece of state below lives in
+# exactly one vertex (tagger counter in the tagger's process, trip caps in
+# the merge arbiter's), so replication-by-pickle is semantically inert.
+class _LoopTagger(ff_node):
+    """Attach ``(stream_index, trip_count)`` to each item entering a loop."""
+
+    def __init__(self):
+        self._next = 0
+
+    def svc(self, x):
+        idx = self._next
+        self._next += 1
+        return idx, 0, x
+
+
+class _LoopBody(ff_node):
+    """Run the user's worker under the loop's (index, trips) envelope."""
+
+    def __init__(self, node: ff_node):
+        self._node = node
+
+    def svc_init(self) -> None:
+        self._node.svc_init()
+
+    def svc_end(self) -> None:
+        self._node.svc_end()
+
+    def svc(self, task):
+        idx, trips, x = task
+        return idx, trips + 1, self._node.svc(x)
+
+
+class _LoopRoute:
+    """The wrap-around route: loop while the predicate holds and the trip
+    cap allows, else emit ``(index, value)`` for the reorder stage."""
+
+    def __init__(self, pred: Callable[[Any], Any], max_trips: Optional[int]):
+        self._pred = pred
+        self._cap = max_trips
+
+    def __call__(self, result):
+        idx, trips, value = result
+        if bool(self._pred(value)) and \
+                (self._cap is None or trips < self._cap):
+            return None, [result]       # back around the loop
+        return (idx, value), []         # leaves the loop
+
+
 class Feedback(Skeleton):
     """Backend-neutral wrap-around loop: re-apply ``worker`` while
     ``loop_while(result)`` holds, emit the first result for which it is
@@ -499,7 +555,8 @@ class Feedback(Skeleton):
         self.name = name
 
     def as_thread_net(self) -> "Pipeline":
-        """The predicate loop as a wrap-around farm (thread backend).
+        """The predicate loop as a wrap-around farm (threads AND procs
+        backends — both host graph runtimes share this lowering).
 
         The wrap-around ring emits in *completion* order (loop tags are
         re-assigned per trip), but the :class:`Feedback` contract — like the
@@ -507,28 +564,14 @@ class Feedback(Skeleton):
         is input order.  So items carry a stream index and a trip counter
         through the loop (the counter enforces ``max_trips``, mirroring the
         mesh ``while_loop`` bound) and a reorder stage restores order
-        downstream."""
-        pred = self.loop_while
-        node = self.node
-        cap = self.max_trips
-        counter = iter(range(1 << 62))
-
-        def tag(x):
-            return next(counter), 0, x
-
-        def work(task):
-            idx, trips, x = task
-            return idx, trips + 1, node.svc(x)
-
-        def route(result):
-            idx, trips, value = result
-            if bool(pred(value)) and (cap is None or trips < cap):
-                return None, [result]       # back around the loop
-            return (idx, value), []         # leaves the loop
-
+        downstream.  The plumbing nodes are picklable classes
+        (:class:`_LoopTagger` / :class:`_LoopBody` / :class:`_LoopRoute`),
+        never closures, so the procs backend can ship them to spawned
+        vertex processes."""
         return Pipeline(
-            Stage(tag, name=f"{self.name}-tagger"),
-            Farm(work, self.nworkers, feedback=route,
+            Stage(_LoopTagger(), name=f"{self.name}-tagger"),
+            Farm(_LoopBody(self.node), self.nworkers,
+                 feedback=_LoopRoute(self.loop_while, self.max_trips),
                  scheduling=self.scheduling),
             Stage(_ReorderNode(), name=f"{self.name}-reorder"),
         )

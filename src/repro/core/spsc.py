@@ -30,7 +30,15 @@ __all__ = ["SPSCQueue", "EOS"]
 
 
 class _EOS:
-    """End-of-stream sentinel (FastFlow's ``NULL`` return from ``svc``)."""
+    """End-of-stream sentinel (FastFlow's ``NULL`` return from ``svc``).
+
+    A singleton *per process*: every ``item is EOS`` check in the runtime
+    relies on identity.  ``__reduce__`` makes pickling return the
+    constructor, so an EOS crossing a process boundary (the ``procs``
+    backend ships it through a shared-memory ring) unpickles to the far
+    side's canonical instance under **every** protocol — without it,
+    protocol ≤ 1 reconstructs via ``object.__new__`` and breaks every
+    identity check downstream."""
 
     _instance: Optional["_EOS"] = None
 
@@ -38,6 +46,9 @@ class _EOS:
         if cls._instance is None:
             cls._instance = super().__new__(cls)
         return cls._instance
+
+    def __reduce__(self):
+        return (_EOS, ())
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return "<EOS>"

@@ -1,0 +1,104 @@
+"""Picklable nodes and child targets for the procs-backend tests.
+
+Spawned vertex processes unpickle their nodes by *importing the defining
+module* — so everything a procs test ships to a child lives here, in a
+module with no test-only imports (no hypothesis, no pytest, no jax):
+a child must be able to import it cold, cheaply.
+"""
+from __future__ import annotations
+
+import time
+
+
+# -- plain svc functions ------------------------------------------------------
+def f(x):
+    return x * 3 + 1
+
+
+def g(x):
+    return x - 7
+
+
+def sq(x):
+    return x * x
+
+
+def fb_step(x):
+    return x * 2 + 1
+
+
+def fb_pred(x):
+    return x < 64
+
+
+def fb_ref(x):
+    x = fb_step(x)
+    while fb_pred(x):
+        x = fb_step(x)
+    return x
+
+
+def drop_odd(x):
+    from repro.core import GO_ON
+    return x if x % 2 == 0 else GO_ON
+
+
+def boom_on_seven(x):
+    if x == 7:
+        raise ValueError("boom at 7")
+    return x
+
+
+def sleepy(x):
+    time.sleep(60.0)  # a wedged worker: only the run timeout can save us
+    return x
+
+
+def big_payload(x):
+    return ("#" * 5000, x)  # forces the shm ring's spill side-channel
+
+
+# -- ff_node-style emitter/collector -----------------------------------------
+class AddTagEmitter:
+    """Emitter node: runs inside the dispatch arbiter's process."""
+
+    def svc_init(self):
+        pass
+
+    def svc_end(self):
+        pass
+
+    def svc(self, task):
+        return task + 100
+
+
+class NegateCollector:
+    """Collector node: runs inside the merge arbiter's process."""
+
+    def svc_init(self):
+        pass
+
+    def svc_end(self):
+        pass
+
+    def svc(self, task):
+        return -task
+
+
+# -- child targets for test_shm ----------------------------------------------
+def echo_child(inbound, outbound):
+    """Pop until EOS; report whether each sentinel kept identity."""
+    from repro.core import EOS, GO_ON
+    while True:
+        item = inbound.pop_wait(timeout=30)
+        if item is EOS:
+            outbound.push_wait(("eos-is-eos", True), timeout=30)
+            return
+        if item is GO_ON:
+            outbound.push_wait(("go-on-is-go-on", True), timeout=30)
+            continue
+        outbound.push_wait(item, timeout=30)
+
+
+def bump_child(board):
+    board.add(1, 5)  # slot 1 is this process's single-writer counter

@@ -1,0 +1,228 @@
+"""Shared-memory SPSC ring: FIFO/lossless invariants, wrap-around,
+oversized-payload spill, EOS identity across process boundaries, and
+clean SharedMemory unlink — the procs backend's edge primitive must be
+as bulletproof as the in-process ring it mirrors."""
+import glob
+import os
+import pickle
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EOS, GO_ON, ShmCounters, ShmRing, SPSCQueue
+from repro.core.spsc import _EOS
+
+_EMPTY = SPSCQueue._EMPTY
+
+
+@pytest.fixture
+def ring():
+    r = ShmRing(16, 64)
+    yield r
+    r.unlink()
+
+
+# -- the Lamport invariants, now over a SharedMemory segment -----------------
+def test_fifo_basic(ring):
+    assert ring.pop() is _EMPTY
+    for i in range(5):
+        assert ring.push(i)
+    assert [ring.pop() for _ in range(5)] == list(range(5))
+    assert ring.pop() is _EMPTY
+
+
+def test_capacity_bound_and_reuse(ring):
+    pushed = 0
+    while ring.push(pushed):
+        pushed += 1
+    assert pushed == ring.capacity
+    assert ring.full() and not ring.push(99)
+    assert ring.pop() == 0
+    assert ring.push(99)  # slot freed
+
+
+def test_wraparound_many_cycles():
+    r = ShmRing(8, 64)
+    try:
+        n = 10 * (r.capacity + 1)  # many full trips around the ring
+        seen = []
+        for i in range(n):
+            assert r.push_wait(i, timeout=1)
+            if i % 3 == 0:  # drain unevenly so head/tail wrap out of phase
+                while True:
+                    item = r.pop()
+                    if item is _EMPTY:
+                        break
+                    seen.append(item)
+        while True:
+            item = r.pop()
+            if item is _EMPTY:
+                break
+            seen.append(item)
+        assert seen == list(range(n))
+    finally:
+        r.unlink()
+
+
+@given(st.lists(st.tuples(st.booleans(),
+                          st.sampled_from(["int", "float", "list"])),
+                min_size=1, max_size=60),
+       st.integers(2, 16))
+@settings(max_examples=25, deadline=None)
+def test_interleaved_push_pop_preserves_order_and_values(ops, cap):
+    """Arbitrary push/pop interleavings never reorder, lose, or corrupt
+    items — for ints, floats and lists (pickled payloads round-trip)."""
+    r = ShmRing(cap, 64)
+    try:
+        mk = {"int": lambda k: k,
+              "float": lambda k: k * 0.5,
+              "list": lambda k: [k, [k + 1], "x" * (k % 7)]}
+        pushed, popped = [], []
+        n = 0
+        for is_push, kind in ops:
+            if is_push:
+                item = mk[kind](n)
+                if r.push(item):
+                    pushed.append(item)
+                n += 1
+            else:
+                item = r.pop()
+                if item is not _EMPTY:
+                    popped.append(item)
+        while True:
+            item = r.pop()
+            if item is _EMPTY:
+                break
+            popped.append(item)
+        assert popped == pushed
+    finally:
+        r.unlink()
+
+
+# -- oversized payloads: the spill side-channel ------------------------------
+def test_oversized_payload_spills_and_roundtrips():
+    r = ShmRing(8, slot_size=32)
+    try:
+        big = ["x" * 10_000, list(range(2_000)), "y" * 31, b"z" * 50_000]
+        for item in big:
+            assert r.push(item)
+        spills = glob.glob(os.path.join("/tmp", f"ffshm-{r.name.lstrip('/')}-*"))
+        assert spills, "oversized payloads should hit the spill side-channel"
+        assert [r.pop() for _ in big] == big
+        # consumed spills are deleted eagerly, not left for unlink
+        assert not glob.glob(
+            os.path.join("/tmp", f"ffshm-{r.name.lstrip('/')}-*"))
+    finally:
+        r.unlink()
+
+
+def test_unconsumed_spills_swept_on_unlink():
+    r = ShmRing(8, slot_size=16)
+    r.push("a" * 1000)
+    pattern = os.path.join("/tmp", f"ffshm-{r.name.lstrip('/')}-*")
+    assert glob.glob(pattern)
+    r.unlink()
+    assert not glob.glob(pattern)
+
+
+# -- EOS identity across pickling and process boundaries (satellite) ---------
+def test_eos_pickle_identity_every_protocol():
+    for proto in range(pickle.HIGHEST_PROTOCOL + 1):
+        assert pickle.loads(pickle.dumps(EOS, proto)) is EOS, proto
+        assert pickle.loads(pickle.dumps(GO_ON, proto)) is GO_ON, proto
+    assert _EOS() is EOS
+
+
+def test_eos_identity_through_spawned_process():
+    # the child target lives in _procs_nodes: a spawned child re-imports
+    # the defining module, which must not pull in test-only deps
+    import multiprocessing as mp
+    from _procs_nodes import echo_child
+    ctx = mp.get_context("spawn")
+    a, b = ShmRing(32, 64), ShmRing(32, 64)
+    p = ctx.Process(target=echo_child, args=(a, b), daemon=True)
+    p.start()
+    try:
+        for item in (1, 2.5, [3, "four"], GO_ON, EOS):
+            assert a.push_wait(item, timeout=30)
+        got = [b.pop_wait(timeout=30) for _ in range(5)]
+        assert got == [1, 2.5, [3, "four"],
+                       ("go-on-is-go-on", True), ("eos-is-eos", True)]
+        p.join(30)
+        assert p.exitcode == 0
+    finally:
+        if p.is_alive():
+            p.terminate()
+        a.unlink()
+        b.unlink()
+
+
+# -- cross-thread stream (same API surface as SPSCQueue) ---------------------
+def test_two_thread_stream_over_shared_memory():
+    r = ShmRing(64, 64)
+    try:
+        n = 2000
+        out = []
+
+        def consume():
+            while True:
+                item = r.pop_wait(timeout=30)
+                if item is EOS:
+                    return
+                out.append(item)
+
+        t = threading.Thread(target=consume)
+        t.start()
+        for i in range(n):
+            assert r.push_wait(i, timeout=30)
+        r.push_wait(EOS, timeout=30)
+        t.join(30)
+        assert out == list(range(n))
+        # both endpoints share one object in-process; across processes the
+        # attached copy counts its own side (see the pickle test below)
+        assert r.pushes == n + 1 and r.pops == n + 1
+    finally:
+        r.unlink()
+
+
+# -- lifecycle: pickle-as-attach, unlink-means-gone --------------------------
+def test_pickle_roundtrip_attaches_same_segment(ring):
+    ring.push("hello")
+    peer = pickle.loads(pickle.dumps(ring))
+    try:
+        assert not peer.owner
+        assert peer.capacity == ring.capacity
+        assert peer.pop() == "hello"
+        assert ring.empty()
+    finally:
+        peer.close()
+
+
+def test_unlink_destroys_segment():
+    from multiprocessing import shared_memory
+    r = ShmRing(8, 64)
+    name = r.name
+    # a second attach works while the segment lives ...
+    probe = shared_memory.SharedMemory(name=name)
+    probe.close()
+    r.unlink()
+    # ... and fails once the owner has unlinked: nothing leaked
+    with pytest.raises(FileNotFoundError):
+        shared_memory.SharedMemory(name=name)
+
+
+def test_counters_cross_process_single_writer():
+    import multiprocessing as mp
+    from _procs_nodes import bump_child
+    board = ShmCounters(2)
+    try:
+        board.add(0, 3)
+        ctx = mp.get_context("spawn")
+        p = ctx.Process(target=bump_child, args=(board,), daemon=True)
+        p.start()
+        p.join(30)
+        assert p.exitcode == 0
+        assert board.get(0) == 3 and board.get(1) == 5
+    finally:
+        board.unlink()

@@ -1,25 +1,26 @@
-"""Skeleton IR semantics: backend parity (threads vs mesh), ordering
-included; IR edge cases (empty stream, all-GO_ON); the single-shard_map
-guarantee of the mesh lowering; and compat hygiene (no version probes
-outside repro/compat.py) — tier-1 for the unified skeleton layer."""
+"""Skeleton IR semantics: backend parity (threads vs mesh vs procs),
+ordering included; IR edge cases (empty stream, all-GO_ON); the
+single-shard_map guarantee of the mesh lowering; and compat hygiene (no
+version probes outside repro/compat.py) — tier-1 for the unified
+skeleton layer."""
 import pathlib
 import re
 
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+import _procs_nodes as N
 import repro
 from repro import compat
 from repro.core import (Farm, Feedback, GO_ON, LoweringError, Net, Pipeline,
-                        Skeleton, Source, Stage, TaskFarm, compose, lower)
+                        ProcProgram, Skeleton, Source, Stage, TaskFarm,
+                        compose, lower)
 
-
-def _f(x):
-    return x * 3 + 1
-
-
-def _g(x):
-    return x - 7
+# The parity nodes live in _procs_nodes (picklable, test-dep-free): the
+# procs backend ships them to spawned vertex processes, which re-import
+# the defining module.  All THREE backends lower the same skeletons.
+_f = N.f
+_g = N.g
 
 
 # Programs are built once at module scope: the mesh lowering caches its
@@ -28,10 +29,12 @@ def _g(x):
 PIPE = Pipeline(Farm(_f, 4, ordered=True), Farm(_g, 4, ordered=True))
 PIPE_T = lower(PIPE, "threads")
 PIPE_M = lower(PIPE, "mesh")
+PIPE_P = lower(PIPE, "procs")
 
-FB = Feedback(lambda x: x * 2 + 1, lambda x: x < 64, nworkers=3, max_trips=32)
+FB = Feedback(N.fb_step, N.fb_pred, nworkers=3, max_trips=32)
 FB_T = lower(FB, "threads")
 FB_M = lower(FB, "mesh")
+FB_P = lower(FB, "procs")
 
 
 # -- backend parity: identical ordered outputs -------------------------------
@@ -73,9 +76,33 @@ def test_parity_feedback_farm(xs):
     assert FB_M(xs) == want
 
 
+# Procs parity draws fewer examples: every example spawns a full process
+# network (13 vertices for PIPE), which costs seconds, not microseconds —
+# the *same* skeleton objects, the same reference, one more backend.
+@given(st.lists(st.integers(-1000, 1000), max_size=16))
+@settings(max_examples=3, deadline=None)
+def test_parity_procs_pipeline_of_farms(xs):
+    """lower(Pipeline(Farm(f), Farm(g)), procs): same ordered output as
+    the threads/mesh lowerings of the identical IR."""
+    assert PIPE_P(xs) == [_g(_f(x)) for x in xs]
+
+
+@given(st.lists(st.integers(0, 60), max_size=10))
+@settings(max_examples=3, deadline=None)
+def test_parity_procs_feedback_farm(xs):
+    """The wrap-around loop on spawned processes: the loop ring is a
+    shared-memory SPSC ring, quiescence reads the ShmCounters board —
+    output identical to the threads ring and the mesh while_loop."""
+    assert FB_P(xs) == [N.fb_ref(x) for x in xs]
+
+
 def test_parity_empty_stream():
-    assert PIPE_T([]) == PIPE_M([]) == []
-    assert FB_T([]) == FB_M([]) == []
+    assert PIPE_T([]) == PIPE_M([]) == PIPE_P([]) == []
+    assert FB_T([]) == FB_M([]) == FB_P([]) == []
+
+
+def test_procs_lowering_registered():
+    assert isinstance(PIPE_P, ProcProgram) and ProcProgram.backend == "procs"
 
 
 def test_all_go_on_stream_on_ir():
