@@ -1,0 +1,79 @@
+"""Hand-off cost of the all-to-all edge matrix: threads vs procs over
+nleft×nright.
+
+The paper's per-hand-off overhead argument (Sec. 3.1, Fig. 5/6) is about
+ONE ring; an all-to-all holds ``N×M`` of them, but any single item still
+crosses exactly two (scatter→left, left→right), so the per-item cost
+should stay nearly flat as the matrix grows — that flatness IS the
+lock-free claim at network scale (a locked/arbitrated exchange degrades
+with fan-in).  This module streams ``NITEMS`` ints through
+``AllToAll(identity, identity, by=mod)`` at several matrix shapes and
+reports µs/item for both host backends.
+
+Procs rows use the ready-handshake (``wait_ready``) so spawn/import cost
+stays out of the figure, and a smaller stream (`NITEMS_PROCS`) because a
+cross-process hand-off is ~µs, not ~hundred-ns.
+
+Rows: ``a2a_threads_{N}x{M}`` / ``a2a_procs_{N}x{M}`` (us/item, derived
+column carries the stream size and edge count).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import AllToAll, lower
+
+NITEMS = 20_000
+NITEMS_PROCS = 4_000
+SHAPES = ((1, 1), (2, 2), (4, 4), (2, 4))
+TIMEOUT = 300.0
+
+
+def _ident(x):
+    return x
+
+
+def _mod(x):
+    return x % 7
+
+
+def _skel(nl: int, nr: int) -> AllToAll:
+    return AllToAll(_ident, _ident, by=_mod, nleft=nl, nright=nr)
+
+
+def _run_threads(nl: int, nr: int, n: int) -> float:
+    prog = lower(_skel(nl, nr), "threads")
+    xs = list(range(n))
+    t0 = time.perf_counter()
+    out = prog(xs)
+    dt = time.perf_counter() - t0
+    assert sorted(out) == xs, "a2a threads output mismatch"
+    return dt
+
+
+def _run_procs(nl: int, nr: int, n: int) -> float:
+    prog = lower(_skel(nl, nr), "procs")
+    xs = list(range(n))
+    g = prog.to_graph(xs)
+    g.run()
+    g.wait_ready()               # exclude spawn/import from the figure
+    t0 = time.perf_counter()
+    out = g.wait(TIMEOUT)
+    dt = time.perf_counter() - t0
+    assert sorted(out) == xs, "a2a procs output mismatch"
+    return dt
+
+
+def run(emit):
+    for nl, nr in SHAPES:
+        edges = nl * nr
+        dt = _run_threads(nl, nr, NITEMS)
+        emit(f"a2a_threads_{nl}x{nr}", dt / NITEMS * 1e6,
+             f"n={NITEMS} edges={edges}")
+        dp = _run_procs(nl, nr, NITEMS_PROCS)
+        emit(f"a2a_procs_{nl}x{nr}", dp / NITEMS_PROCS * 1e6,
+             f"n={NITEMS_PROCS} edges={edges}")
+
+
+if __name__ == "__main__":
+    run(lambda name, us, derived="": print(f"{name},{us:.3f},{derived}"))

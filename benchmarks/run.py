@@ -10,40 +10,89 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement):
   sched_policies.py   — scheduling policies × grain on a skewed farm + fusion
   proc_farm.py        — threads-vs-procs farm speedup over grain (the
                         GIL-escape curve of the procs backend)
+  a2a_shuffle.py      — all-to-all hand-off cost vs nleft×nright matrix
+                        shape, threads vs procs
   smith_waterman.py   — Fig. 7 + Table 1: SW database search GCUPS
   roofline.py         — EXPERIMENTS §Roofline terms from the dry-run artifacts
+
+``--json PATH`` additionally writes the rows machine-readable (schema:
+``{"schema": "bench-rows/1", "results": {benchmark: [{"config",
+"us_per_item", "derived"}]}}``) so the perf trajectory is recorded run
+over run — CI uploads ``BENCH_results.json`` as an artifact.  ``--only
+a,b`` restricts the run to the named modules (smoke configs stay the
+caller's job: set module attributes before calling :func:`main`).
 
 Skeleton API
 ------------
 The streaming modules all build the same IR (``repro.core.skeleton``): a
-declarative ``Pipeline`` / ``Farm`` / ``Feedback`` expression, executed by
-``lower(skel, backend=...)``.  The ``threads`` backend lowers to the
-thread/SPSC-ring graph runtime (what ``farm_overhead`` / ``farm_composition``
-cost out, hand-off by hand-off); the ``mesh`` backend lowers the *whole*
-skeleton to one ``shard_map`` program (``pipeline_apply`` of ``farm_map``
-stages — no host hop between farms).  ``skeleton_parity.py`` runs one
-skeleton both ways, asserts identical ordered outputs, and reports the
-per-item hand-off overhead vs the fused lowering — the measured input to
-the ROADMAP's fusion-policy item.
+declarative ``Pipeline`` / ``Farm`` / ``Feedback`` / ``AllToAll``
+expression, executed by ``lower(skel, backend=...)``.  The ``threads``
+backend lowers to the thread/SPSC-ring graph runtime (what
+``farm_overhead`` / ``farm_composition`` cost out, hand-off by hand-off);
+the ``mesh`` backend lowers the *whole* skeleton to one ``shard_map``
+program (``pipeline_apply`` of ``farm_map`` stages — no host hop between
+farms).  ``skeleton_parity.py`` runs one skeleton both ways, asserts
+identical ordered outputs, and reports the per-item hand-off overhead vs
+the fused lowering — the measured input to the ROADMAP's fusion-policy
+item.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import json
 import time
+from typing import List, Optional, Tuple
+
+MODULES = ("queues", "farm_overhead", "farm_composition", "skeleton_parity",
+           "sched_policies", "proc_farm", "a2a_shuffle", "smith_waterman",
+           "roofline")
 
 
 def _emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
 
-def main() -> None:
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as machine-readable JSON "
+                         "(BENCH_results.json schema)")
+    ap.add_argument("--only", metavar="MODS", default=None,
+                    help="comma-separated benchmark modules to run "
+                         f"(default: all of {','.join(MODULES)})")
+    args = ap.parse_args(argv)
+
+    names = MODULES if args.only is None else tuple(
+        m.strip() for m in args.only.split(",") if m.strip())
+    unknown = sorted(set(names) - set(MODULES))
+    if unknown:
+        ap.error(f"unknown benchmark modules {unknown} (have {list(MODULES)})")
+
+    rows: List[Tuple[str, str, float, str]] = []
     print("name,us_per_call,derived")
     t0 = time.time()
-    from . import (queues, farm_overhead, farm_composition, skeleton_parity,
-                   sched_policies, proc_farm, smith_waterman, roofline)
-    for mod in (queues, farm_overhead, farm_composition, skeleton_parity,
-                sched_policies, proc_farm, smith_waterman, roofline):
-        mod.run(_emit)
+    for name in names:
+        mod = importlib.import_module(f"{__package__ or 'benchmarks'}.{name}")
+
+        def emit(row_name: str, us: float, derived: str = "",
+                 _bench: str = name) -> None:
+            rows.append((_bench, row_name, us, derived))
+            _emit(row_name, us, derived)
+
+        mod.run(emit)
     _emit("total_bench_wall", (time.time() - t0) * 1e6, "")
+
+    if args.json:
+        results: dict = {}
+        for bench, config, us, derived in rows:
+            results.setdefault(bench, []).append(
+                {"config": config, "us_per_item": us, "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump({"schema": "bench-rows/1", "results": results}, f,
+                      indent=2, sort_keys=True)
+        print(f"# wrote {sum(map(len, results.values()))} rows "
+              f"from {len(results)} benchmarks to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -4,8 +4,9 @@
      backends — the host thread/SPSC graph, the GIL-escaping process
      graph over shared-memory rings, and a single shard_map mesh program
      (no host hop between stages); plus the threads backend's pluggable
-     scheduling policies (Farm(scheduling=...)) and the grain-aware
-     fusion pass (lower(..., fuse=...));
+     scheduling policies (Farm(scheduling=...)), the grain-aware
+     fusion pass (lower(..., fuse=...)), and the all-to-all keyed
+     shuffle (reduce_by_key — §1d);
   2. the paper's application: Smith-Waterman database search through an
      ordered farm;
   3. the LM framework: one reduced-config train step + one decode step.
@@ -26,6 +27,12 @@ def _sq(x):
 
 def _inc(x):
     return x + 1
+
+
+def _mod4(x):
+    # a shuffle key: array-polymorphic (x % 4 works on a jnp column too),
+    # so the SAME key function routes on all three backends
+    return x % 4
 
 
 def main():
@@ -80,6 +87,21 @@ def main():
     on_procs = lower(skel, "procs")(range(10))
     print("procs:  ", on_procs)
     assert on_procs == on_threads == on_mesh
+
+    # -- 1d. keyed shuffle: ONE reduce_by_key, THREE backends ----------------
+    # reduce_by_key(by, fold) rewrites to the AllToAll building block — an
+    # N×M matrix of SPSC edges on the host backends (each left vertex owns
+    # one ring per right vertex: single-writer, no arbiter between the
+    # layers), and ONE shard_map keyed-exchange + segment-reduction program
+    # on the mesh (named fold + static nkeys make it traceable).  Output is
+    # unordered (key, fold) pairs — compare as dicts.
+    from repro.core import reduce_by_key
+    rbk = reduce_by_key(_mod4, "sum", nleft=2, nright=2, nkeys=4)
+    by_threads = dict(lower(rbk, "threads")(range(32)))
+    by_procs = dict(lower(rbk, "procs")(range(32)))
+    by_mesh = dict(lower(rbk, "mesh")(range(32)))
+    assert by_threads == by_procs == by_mesh
+    print("reduce_by_key (threads == procs == mesh):", by_threads)
 
     # -- 2. the paper's app: SW database search (host-only payloads) ---------
     rng = np.random.default_rng(0)

@@ -14,15 +14,19 @@
 from .spsc import EOS, SPSCQueue
 from .lockq import LockQueue
 from .shm import ShmCounters, ShmRing
-from .sched import (SCHEDULERS, CostModel, OnDemand, RoundRobin, Scheduler,
-                    WorkStealing, calibrate_handoff_us, make_scheduler)
-from .skeleton import (GO_ON, EmitMany, Farm, FarmStats, Feedback, FnNode,
-                       FusedNode,
+from .sched import (SCHEDULERS, CostModel, KeyAffinity, OnDemand, RoundRobin,
+                    Scheduler, WorkStealing, calibrate_handoff_us,
+                    make_scheduler)
+from .skeleton import (GO_ON, AllToAll, EmitMany, Farm, FarmStats, Feedback,
+                       FnNode, FusedNode,
                        LatencyReservoir, LoweringError, MeshProgram, Pipeline,
                        Skeleton, Source, Stage, ThreadProgram, as_skeleton,
                        compose, ff_node, fuse, lower)
 from .graph import Accelerator, Graph, Net, Token, build
 from .procgraph import ProcAccelerator, ProcGraph, ProcProgram
+from .a2a import A2AMeshProgram, stable_hash
+from .stream_ops import (FOLDS, Fold, KeyedReduce, partition_by,
+                         reduce_by_key, window)
 from .farm import TaskFarm
 from .allocator import PagePool, PoolExhausted
 from .mdf import MDFExecutor, MDFTask
@@ -40,13 +44,16 @@ _LAZY = {
 __all__ = [
     "EOS", "SPSCQueue", "LockQueue", "ShmRing", "ShmCounters",
     "GO_ON", "EmitMany", "Accelerator", "Farm", "Feedback", "Graph", "Net",
-    "Pipeline",
+    "Pipeline", "AllToAll",
     "Skeleton", "Source", "Stage", "Token", "compose",
     "LoweringError", "MeshProgram", "ThreadProgram", "as_skeleton", "build",
     "lower", "fuse", "FusedNode",
     "ProcAccelerator", "ProcGraph", "ProcProgram",
+    "A2AMeshProgram", "stable_hash",
+    "FOLDS", "Fold", "KeyedReduce", "partition_by", "reduce_by_key",
+    "window",
     "SCHEDULERS", "Scheduler", "RoundRobin", "OnDemand", "WorkStealing",
-    "CostModel", "make_scheduler", "calibrate_handoff_us",
+    "CostModel", "KeyAffinity", "make_scheduler", "calibrate_handoff_us",
     "FarmStats", "LatencyReservoir", "FnNode", "TaskFarm", "ff_node",
     "PagePool", "PoolExhausted",
     "MDFExecutor", "MDFTask",

@@ -70,18 +70,18 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
 
 from .sched import Scheduler, make_scheduler
-from .skeleton import (GO_ON, EmitMany, Farm, FarmStats, Feedback, FnNode,
-                       Pipeline, Skeleton, Source, Stage, _FarmEmitMany,
-                       _SeqNode, as_skeleton, compose, ff_node)
+from .skeleton import (GO_ON, AllToAll, EmitMany, Farm, FarmStats, Feedback,
+                       FnNode, Pipeline, Skeleton, Source, Stage,
+                       _FarmEmitMany, _SeqNode, as_skeleton, compose, ff_node)
 from .spsc import EOS, SPSCQueue
 
 __all__ = [
     "GO_ON", "Token", "FarmStats", "TagSpace",
     "ff_node", "FnNode",
     "Graph", "Vertex", "StageVertex", "DispatchVertex", "WorkerVertex",
-    "MergeVertex", "build",
-    "Net", "Stage", "Source", "Pipeline", "Farm", "Feedback", "compose",
-    "Accelerator",
+    "MergeVertex", "build", "ring_list",
+    "Net", "Stage", "Source", "Pipeline", "Farm", "Feedback", "AllToAll",
+    "compose", "Accelerator",
 ]
 
 _EMPTY = SPSCQueue._EMPTY
@@ -199,6 +199,7 @@ class StageVertex(Vertex):
         super().__init__(node, name=name)
         if route == "bcast":
             self._sched: Optional[Scheduler] = None
+            self._route: Optional[Callable] = None
         else:
             try:
                 self._sched = make_scheduler(route)
@@ -206,14 +207,22 @@ class StageVertex(Vertex):
                 raise ValueError(
                     f"unknown Stage route {route!r}: expected 'bcast', a "
                     f"scheduling policy name, or a Scheduler") from None
-            if type(self._sched).place is not Scheduler.place:
-                # stage fan-out is pick()-routed per emission; a policy
-                # that holds tokens in the arbiter (custom place/pump,
-                # e.g. worksteal) needs the farm dispatch arbiter
+            # resolve the payload-dependent hook ONCE: the per-emission
+            # path must not pay a route() virtual call for the policies
+            # (rr/ondemand/costmodel) that never override it
+            self._route = (self._sched.route
+                           if type(self._sched).route is not Scheduler.route
+                           else None)
+            if type(self._sched).place is not Scheduler.place \
+                    and self._route is None:
+                # stage fan-out is routed per emission (payload-dependent
+                # route() or stateless pick()); a policy that holds tokens
+                # in the arbiter (custom place/pump, e.g. worksteal)
+                # needs the farm dispatch arbiter
                 raise ValueError(
                     f"Stage route {route!r} is a token-holding policy "
                     f"(custom place()); stage fan-out supports only "
-                    f"pick()-based policies — use a Farm for it")
+                    f"pick()/route()-based policies — use a Farm for it")
         self.route = route
 
     def _loop(self) -> None:
@@ -223,10 +232,12 @@ class StageVertex(Vertex):
             while True:
                 out = self.node.svc(None)
                 if out is None or out is EOS:
-                    return
+                    break
                 if out is GO_ON:
                     continue
                 self._emit(out)
+            self._flush_eos()
+            return
         eos: set = set()
         while len(eos) < len(self.ins):
             progress = False
@@ -246,6 +257,16 @@ class StageVertex(Vertex):
                 self._emit(out)
             if not progress:
                 time.sleep(_POLL)
+        self._flush_eos()
+
+    def _flush_eos(self) -> None:
+        """EOS flush (FastFlow's eosnotify): give the node one chance to
+        emit buffered state (``svc_eos``) into the stream before this
+        vertex's own EOS propagates — how the keyed folds and window
+        operators release their accumulators."""
+        out = self.node.svc_eos()
+        if out is not None and out is not GO_ON:
+            self._emit(out)
 
     def _emit(self, out: Any) -> None:
         if isinstance(out, EmitMany):  # multi-emit (e.g. a reorder flush)
@@ -259,8 +280,8 @@ class StageVertex(Vertex):
                 if not self._push_abortable(q, out):
                     raise _Aborted()
         else:
-            q = self.outs[self._sched.pick()]
-            if not self._push_abortable(q, out):
+            w = self._sched.pick() if self._route is None else self._route(out)
+            if not self._push_abortable(self.outs[w], out):
                 raise _Aborted()
 
 
@@ -726,14 +747,28 @@ Net = Skeleton
 _as_net = as_skeleton
 
 
+def ring_list(in_ring: Optional[Any]) -> List[Any]:
+    """Normalise a build edge: ``None`` (no upstream), one ring, or a list
+    of rings (an all-to-all's right row emits one ring per vertex — the
+    downstream vertex fan-in-merges them all, EOS counted per edge)."""
+    if in_ring is None:
+        return []
+    return list(in_ring) if isinstance(in_ring, (list, tuple)) else [in_ring]
+
+
 def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
           terminal: bool) -> Optional[Any]:
     """Wire a skeleton IR node into ``g`` between an optional inbound ring
-    and (unless terminal) a freshly created outbound ring — the threads
-    backend of :func:`repro.core.skeleton.lower`.
+    (or ring *list* — see :func:`ring_list`) and (unless terminal) a
+    freshly created outbound ring — the threads backend of
+    :func:`repro.core.skeleton.lower`.
 
     This is what makes skeletons close under composition: a ``Farm`` is a
     vertex of the enclosing ``Pipeline``, and vice versa."""
+    if isinstance(skel, AllToAll):
+        from .a2a import build_thread_a2a  # lazy: a2a imports this module
+        return build_thread_a2a(skel, g, ring_list(in_ring), terminal)
+
     if isinstance(skel, Source):
         assert in_ring is None, "Source cannot have an upstream edge"
         return build(Stage(skel.node, name=skel.name), g, None, terminal)
@@ -763,7 +798,7 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
             loop_ring=loop_ring,
         ))
         if in_ring is not None:
-            disp.ins.append(in_ring)
+            disp.ins.extend(ring_list(in_ring))
         else:
             assert skel.emitter is not None, \
                 "a standalone farm needs an emitter (or compose it after a Source)"
@@ -790,8 +825,7 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
 
     if isinstance(skel, Stage):
         v = g.add(StageVertex(skel.node, name=skel.name))
-        if in_ring is not None:
-            v.ins.append(in_ring)
+        v.ins.extend(ring_list(in_ring))
         if terminal:
             return None
         ring = g.channel()

@@ -62,10 +62,10 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from .sched import Scheduler, make_scheduler
 from .shm import ShmCounters, ShmRing
-from .skeleton import (BACKENDS, GO_ON, EmitMany, Farm, FarmStats, Feedback,
-                       LoweringError, Pipeline, Skeleton, Source, Stage,
-                       _FarmEmitMany, _has_grained_stage, as_skeleton, ff_node,
-                       fuse as _fuse_pass)
+from .skeleton import (BACKENDS, GO_ON, AllToAll, EmitMany, Farm, FarmStats,
+                       Feedback, LoweringError, Pipeline, Skeleton, Source,
+                       Stage, _FarmEmitMany, _has_grained_stage, as_skeleton,
+                       ff_node, fuse as _fuse_pass)
 from .spsc import EOS, SPSCQueue
 
 __all__ = [
@@ -242,10 +242,12 @@ class ProcStageVertex(ProcVertex):
             while True:
                 out = self.node.svc(None)
                 if out is None or out is EOS:
-                    return
+                    break
                 if out is GO_ON:
                     continue
                 self._emit(out)
+            self._flush_eos()
+            return
         eos: set = set()
         backoff = _Backoff()
         while len(eos) < len(self.ins):
@@ -274,6 +276,15 @@ class ProcStageVertex(ProcVertex):
                 if self.failed.is_set():
                     raise _Aborted()
                 backoff.idle()
+        self._flush_eos()
+
+    def _flush_eos(self) -> None:
+        """EOS flush (eosnotify), mirroring ``graph.StageVertex``: the node
+        may emit buffered state into the stream before this vertex's EOS
+        goes out — keyed folds and window operators release here."""
+        out = self.node.svc_eos()
+        if out is not None and out is not GO_ON:
+            self._emit(out)
 
     def _emit(self, out: Any) -> None:
         if isinstance(out, EmitMany):  # multi-emit (e.g. a reorder flush)
@@ -704,7 +715,8 @@ class ProcGraph:
         self._rings: List[Any] = []          # every segment, for unlink
         self._procs: List[Any] = []
         self._farm_stats: List[Tuple[Farm, ShmRing]] = []
-        self._results_ring: Optional[ShmRing] = None
+        self._results_rings: List[ShmRing] = []
+        self._eos_rings: set = set()
         self._eos_seen = False
         self._ready = 0
         self._cleaned = False
@@ -736,11 +748,15 @@ class ProcGraph:
         return ring
 
     def results_ring(self) -> ShmRing:
-        """The terminal edge: produced by the sink vertex, consumed by the
-        calling process (SPSC discipline includes the caller)."""
-        if self._results_ring is None:
-            self._results_ring = self.channel(max(self.capacity, 1024))
-        return self._results_ring
+        """A terminal edge: produced by ONE sink vertex, consumed by the
+        calling process (SPSC discipline includes the caller).  Every call
+        creates a fresh ring — a network with several sinks (the right row
+        of a terminal all-to-all) gets one ring per sink, each
+        single-producer, and the caller drains them all; the stream is
+        complete when every ring has delivered EOS."""
+        ring = self.channel(max(self.capacity, 1024))
+        self._results_rings.append(ring)
+        return ring
 
     def register_farm_stats(self, farm: Farm, ring: ShmRing) -> None:
         self._farm_stats.append((farm, ring))
@@ -785,18 +801,23 @@ class ProcGraph:
                 raise self.failed[0]
 
     def poll_results(self) -> bool:
-        """Drain whatever is in the results ring right now (non-blocking).
-        Returns True once EOS has been seen."""
-        if self._eos_seen or self._results_ring is None:
+        """Drain whatever the results rings hold right now (non-blocking).
+        Returns True once EVERY results ring has delivered EOS."""
+        if self._eos_seen or not self._results_rings:
             return self._eos_seen
-        while True:
-            item = self._results_ring.pop()
-            if item is _EMPTY:
-                return False
-            if item is EOS:
-                self._eos_seen = True
-                return True
-            self.results.append(item)
+        for i, ring in enumerate(self._results_rings):
+            if i in self._eos_rings:
+                continue
+            while True:
+                item = ring.pop()
+                if item is _EMPTY:
+                    break
+                if item is EOS:
+                    self._eos_rings.add(i)
+                    break
+                self.results.append(item)
+        self._eos_seen = len(self._eos_rings) == len(self._results_rings)
+        return self._eos_seen
 
     def _on_ctl(self, msg: Tuple) -> None:
         if msg[0] == "ready":
@@ -822,7 +843,7 @@ class ProcGraph:
                         f"vertex process {p.name!r} died with exit code "
                         f"{p.exitcode} (killed?)"))
                 return
-        if self._procs and self._results_ring is not None \
+        if self._procs and self._results_rings \
                 and all(not p.is_alive() for p in self._procs) \
                 and not self.poll_results():
             self._drain_ctl()
@@ -924,10 +945,17 @@ class ProcGraph:
 # ---------------------------------------------------------------------------
 # procs lowering: IR tree -> spawned vertices + shared-memory rings
 # ---------------------------------------------------------------------------
-def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[ShmRing],
-          terminal: bool) -> Optional[ShmRing]:
+def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
+          terminal: bool) -> Optional[Any]:
     """Wire a skeleton IR node into ``g`` — the procs twin of
-    :func:`repro.core.graph.build`, one spawned process per vertex."""
+    :func:`repro.core.graph.build`, one spawned process per vertex.
+    ``in_ring`` may be one ring or a list (a terminal all-to-all row)."""
+    from .graph import ring_list
+
+    if isinstance(skel, AllToAll):
+        from .a2a import build_proc_a2a  # lazy: a2a imports this module
+        return build_proc_a2a(skel, g, ring_list(in_ring), terminal)
+
     if isinstance(skel, Source):
         assert in_ring is None, "Source cannot have an upstream edge"
         return build(Stage(skel.node, name=skel.name), g, None, terminal)
@@ -965,7 +993,7 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[ShmRing],
             sched, skel.emitter, loop_ring=loop_ring, loop_board=board,
             service_rings=service_rings, stats_out=d2m))
         if in_ring is not None:
-            disp.ins.append(in_ring)
+            disp.ins.extend(ring_list(in_ring))
         else:
             assert skel.emitter is not None, \
                 "a standalone farm needs an emitter (or compose it after a Source)"
@@ -993,8 +1021,7 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[ShmRing],
 
     if isinstance(skel, Stage):
         v = g.add(ProcStageVertex(skel.node, name=skel.name))
-        if in_ring is not None:
-            v.ins.append(in_ring)
+        v.ins.extend(ring_list(in_ring))
         if terminal:
             v.outs.append(g.results_ring())
             return None

@@ -52,6 +52,7 @@ from .spsc import SPSCQueue
 
 __all__ = [
     "Scheduler", "RoundRobin", "OnDemand", "WorkStealing", "CostModel",
+    "KeyAffinity",
     "SCHEDULERS", "make_scheduler", "calibrate_handoff_us",
 ]
 
@@ -104,6 +105,15 @@ class Scheduler:
 
     def pick(self) -> int:
         raise NotImplementedError
+
+    def route(self, payload: Any) -> Optional[int]:
+        """Payload-dependent routing hook for single-token fan-out (Stage
+        routes, the all-to-all scatter): return a worker index computed
+        *from the payload*, or ``None`` (the default) to defer to
+        ``pick()``.  Unlike ``place``, a policy implementing ``route``
+        never holds tokens, so it stays usable wherever only pick()-based
+        policies are allowed."""
+        return None
 
     def place(self, tok: Any, emit: Callable[[int, Any], None]) -> None:
         emit(self.pick(), tok)
@@ -275,11 +285,62 @@ class CostModel(Scheduler):
                                   (w - start) % n))
 
 
+class KeyAffinity(Scheduler):
+    """Key-affinity placement — the all-to-all routing rule as a farm
+    policy: tasks whose keys are equal always land on the *same* worker
+    (``stable_hash(by(payload)) % nworkers``, the deterministic hash every
+    keyed shuffle uses on its left→right edge matrix).  This is the policy
+    surface a plain ``Farm`` needs to host per-key state — stateful fold
+    workers, per-key caches, sticky sessions — without building a full
+    shuffle network.
+
+    ``by`` extracts the key from the payload (default: the payload itself)
+    and must be picklable for the procs backend (module-level function).
+    Placement is payload-dependent: the policy implements ``route`` (so
+    ``Stage`` fan-out and the all-to-all scatter can use it — it never
+    holds tokens) and ``place`` on top of it for the farm arbiters; only
+    the caller-side ``ProcAccelerator`` fast path falls back to the full
+    arbiter graph.  ``pick`` (used only by straggler re-issue duplicates)
+    degrades to shortest-ring — a duplicate may run off-key, which is
+    safe: affinity is a placement preference, and the merge arbiter
+    dedups by tag regardless of who serviced it.  Speculation plus
+    *stateful* per-key workers is the caller's contract to avoid, exactly
+    as with ``WorkStealing``."""
+
+    name = "keyaffinity"
+
+    def __init__(self, by: Optional[Callable[[Any], Any]] = None) -> None:
+        super().__init__()
+        self.by = by
+        # bound once, off the per-item path (import is safe here: sched is
+        # fully loaded before any policy can be instantiated)
+        from .a2a import stable_hash
+        self._hash = stable_hash
+
+    def fresh(self) -> "KeyAffinity":
+        return KeyAffinity(self.by)
+
+    def pick(self) -> int:  # duplicates from straggler re-issue only
+        return min(range(len(self.outs)), key=lambda w: len(self.outs[w]))
+
+    def route(self, payload: Any) -> int:
+        key = payload if self.by is None else self.by(payload)
+        return self._hash(key) % len(self.outs)
+
+    def place(self, tok: Any, emit: Callable[[int, Any], None]) -> None:
+        # tok is graph.Token (threads), a (tag, issued, payload) tuple
+        # (procs wire format), or a raw payload (caller-side arbitration)
+        payload = tok.payload if hasattr(tok, "payload") else (
+            tok[2] if isinstance(tok, tuple) and len(tok) == 3 else tok)
+        emit(self.route(payload), tok)
+
+
 SCHEDULERS: Dict[str, Type[Scheduler]] = {
     "rr": RoundRobin,
     "ondemand": OnDemand,
     "worksteal": WorkStealing,
     "costmodel": CostModel,
+    "keyaffinity": KeyAffinity,
 }
 
 

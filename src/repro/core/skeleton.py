@@ -47,6 +47,7 @@ __all__ = [
     "GO_ON", "EmitMany", "ff_node", "FnNode", "FusedNode",
     "FarmStats", "LatencyReservoir",
     "Skeleton", "Stage", "Source", "Pipeline", "Farm", "Feedback",
+    "AllToAll",
     "compose", "as_skeleton", "fuse",
     "LoweringError", "lower", "BACKENDS", "ThreadProgram", "MeshProgram",
 ]
@@ -72,6 +73,15 @@ class ff_node:
 
     def svc_end(self) -> None:
         """Called once after EOS has been processed."""
+
+    def svc_eos(self) -> Any:
+        """EOS flush (FastFlow's ``eosnotify``): called once when every
+        inbound edge has delivered EOS, *before* this vertex's own EOS
+        propagates downstream.  Return a payload (or :class:`EmitMany`)
+        to flush buffered state into the stream — the keyed folds in
+        :mod:`repro.core.stream_ops` emit their per-key accumulators
+        here — or ``None``/``GO_ON`` for nothing (the default)."""
+        return None
 
 
 class FnNode(ff_node):
@@ -181,6 +191,30 @@ class FusedNode(ff_node):
         if not self.flatten:
             return self._apply_farm(task)
         return self._apply(0, task)
+
+    def svc_eos(self) -> Any:
+        """Chain the EOS flush: each constituent's ``svc_eos`` output runs
+        through the *rest* of the chain, exactly as its separate vertex's
+        flush would have streamed through the downstream vertices.  Only
+        meaningful for ``flatten=True`` (stage∘stage) fusions — farm
+        workers are never flushed by the merge arbiter, so the
+        ``flatten=False`` junction keeps the default no-op."""
+        if not self.flatten:
+            return None
+        out = EmitMany()
+        for i, n in enumerate(self.nodes):
+            r = n.svc_eos()
+            if r is None or r is GO_ON:
+                continue
+            for t in (r if isinstance(r, EmitMany) else [r]):
+                rr = self._apply(i + 1, t)
+                if rr is None or rr is GO_ON:
+                    continue
+                if isinstance(rr, EmitMany):
+                    out.extend(rr)
+                else:
+                    out.append(rr)
+        return out if out else None
 
     def _apply(self, i: int, task: Any) -> Any:
         nodes = self.nodes
@@ -452,6 +486,90 @@ class Farm(Skeleton):
         self.stats = stats if stats is not None else FarmStats()
 
 
+class AllToAll(Skeleton):
+    """FastFlow's third core building block (tutorial TR-12-04): ``nleft``
+    left workers, each able to route every emission to any of ``nright``
+    right workers — the shape that unlocks keyed shuffles, partitioned
+    reduction and data-parallel aggregation, none of which Pipeline/Farm
+    can express.
+
+    Host lowerings (threads AND procs) wire an **N×M matrix of SPSC
+    edges**: each left vertex owns one private ring per right vertex, so
+    the single-writer discipline holds with *no arbiter between the
+    layers* — the configuration where the paper's per-hand-off overhead
+    argument matters most.  Each right vertex counts EOS once per inbound
+    edge (fan-in termination), then flushes its node's buffered state
+    (:meth:`ff_node.svc_eos`) before its own EOS propagates.
+
+    Parameters
+    ----------
+    left / right: one ``ff_node``/callable shared by the whole row, or a
+        list with one node per vertex.  A single *stateful* node instance
+        is shared by reference across the row on the threads backend
+        (same convention as ``Farm``); pass a list of fresh instances —
+        what :mod:`repro.core.stream_ops` does — for per-vertex state.
+        With no upstream edge the left nodes run as sources (``svc(None)``
+        until ``None``), the tutorial's generators-into-shuffle shape.
+    by: key function for the left→right route: an emission ``x`` lands on
+        right vertex ``stable_hash(by(x)) % nright`` (deterministic across
+        processes — see :func:`repro.core.a2a.stable_hash`), so every left
+        vertex agrees on each key's owner with zero coordination.
+        ``None`` degrades to per-left-vertex round-robin (a plain
+        repartition).
+    ordered: preserve input stream order via the existing tagged-token
+        machinery: a tagger assigns stream indices at the scatter, tags
+        ride the matrix untouched, and a reorder stage downstream releases
+        in index order.  Requires an upstream stream and 1:1 nodes
+        (EOS-flushing right nodes cannot be tagged).
+    scheduling: how the scatter distributes upstream items over the left
+        row — any pick()-based policy (``"rr"``/``"ondemand"``/
+        ``"costmodel"``/:class:`~repro.core.sched.KeyAffinity`).
+    reduce: optional static keyed-reduction spec
+        (:class:`repro.core.stream_ops.KeyedReduce`) that lets the mesh
+        backend lower the shuffle to ONE ``shard_map`` program
+        (dispatch-by-key exchange + segment reduction); host backends
+        ignore it and run the ``right`` nodes.
+    """
+
+    def __init__(self, left: Any, right: Any, *, by: Optional[Callable] = None,
+                 nleft: Optional[int] = None, nright: Optional[int] = None,
+                 ordered: bool = False, scheduling: Any = "rr",
+                 reduce: Any = None, grain: Optional[int] = None,
+                 name: str = "ff-a2a", queue_class: Optional[Type] = None,
+                 capacity: Optional[int] = None):
+        def pool(spec: Any, n: Optional[int]) -> Tuple[List[ff_node], int]:
+            if isinstance(spec, (list, tuple)):
+                nodes = [_as_node(s) for s in spec]
+                n = len(nodes) if n is None else n
+                assert len(nodes) == n, "node list does not match row width"
+                return nodes, n
+            n = 1 if n is None else n
+            return [_as_node(spec)] * n, n
+
+        from .sched import Scheduler, make_scheduler
+        s = make_scheduler(scheduling)  # raises ValueError on unknown policy
+        if type(s).place is not Scheduler.place \
+                and type(s).route is Scheduler.route:
+            raise ValueError(
+                f"AllToAll scatter routing supports only pick()/route()-"
+                f"based policies (rr / ondemand / costmodel / keyaffinity),"
+                f" not the token-holding {s.name!r}")
+        self.left_nodes, self.nleft = pool(left, nleft)
+        self.right_nodes, self.nright = pool(right, nright)
+        assert self.nleft >= 1 and self.nright >= 1
+        assert not (ordered and reduce is not None), \
+            "a keyed reduction emits per-key folds at EOS — stream order " \
+            "across it is undefined; use ordered=False"
+        self.by = by
+        self.ordered = ordered
+        self.scheduling = scheduling
+        self.reduce = reduce
+        self.grain = grain
+        self.name = name
+        self.queue_class = queue_class
+        self.capacity = capacity
+
+
 class _ReorderNode(ff_node):
     """Buffer ``(i, x)`` pairs and release ``x``s in index order."""
 
@@ -467,6 +585,13 @@ class _ReorderNode(ff_node):
             out.append(self._buf.pop(self._next))
             self._next += 1
         return out if out else GO_ON
+
+    def svc_eos(self):
+        # residue flush: indices skipped upstream (e.g. a GO_ON filter
+        # inside an ordered all-to-all) leave a gap that would otherwise
+        # strand everything behind it — release in tag order at EOS
+        out = EmitMany(self._buf.pop(k) for k in sorted(self._buf))
+        return out if out else None
 
 
 # Loop-plumbing nodes for Feedback.as_thread_net.  These are classes (not
@@ -673,6 +798,13 @@ def fuse(skel: Any, *, threshold_us: Optional[float] = None,
     hand-off threshold (:func:`repro.core.sched.calibrate_handoff_us`)
     only when some stage actually declares a grain — skeletons that don't
     opt in are untouched.
+
+    An :class:`AllToAll` is a hard fusion boundary: merging a stage into
+    (or across) the shuffle would collapse its N×M edge matrix into one
+    vertex and silently serialise the keyed partitioning.  Neither rewrite
+    matches it — it is not a :class:`Stage` and never absorbs — so stages
+    on either side of an all-to-all fuse among themselves but never with
+    or through it (``tests/test_a2a.py`` pins this).
     """
     skel = as_skeleton(skel)
     if not isinstance(skel, Pipeline):
@@ -1000,4 +1132,21 @@ class MeshProgram:
         return fn
 
 
-BACKENDS["mesh"] = MeshProgram
+def _contains_a2a(skel: Skeleton) -> bool:
+    if isinstance(skel, Pipeline):
+        return any(_contains_a2a(s) for s in skel.stages)
+    return isinstance(skel, AllToAll)
+
+
+def _mesh_backend(skeleton: Skeleton, **opts: Any):
+    """Mesh-backend factory: skeletons containing an :class:`AllToAll`
+    compile to the keyed-shuffle program (:class:`repro.core.a2a.
+    A2AMeshProgram` — dispatch-by-key exchange + segment reduction in one
+    ``shard_map``); everything else to :class:`MeshProgram`."""
+    if _contains_a2a(skeleton):
+        from .a2a import A2AMeshProgram
+        return A2AMeshProgram(skeleton, **opts)
+    return MeshProgram(skeleton, **opts)
+
+
+BACKENDS["mesh"] = _mesh_backend

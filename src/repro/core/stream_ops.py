@@ -1,0 +1,233 @@
+"""Streaming aggregation operators on top of the all-to-all block.
+
+Everything here is an **IR rewrite**: each operator returns plain skeleton
+nodes (:class:`~repro.core.skeleton.AllToAll`, :class:`~repro.core.
+skeleton.Stage`), so every operator inherits the backends the IR has —
+threads, procs, and (for statically-keyed reductions) mesh — without one
+line of backend code of its own.  This is the aggregation shape of the
+parquet-aggregator workload: record streams → keyed shuffle → per-key
+fold (``examples/log_aggregation.py`` runs it end to end).
+
+=================  =========================================================
+operator           rewrite
+=================  =========================================================
+``partition_by``   ``AllToAll(identity, worker×n, by=key)`` — all items
+                   sharing a key are serviced by the same right-vertex
+                   instance (keyed affinity without a reduction)
+``reduce_by_key``  ``AllToAll(left, _KeyFold×n, by=key, reduce=spec)`` —
+                   per-key fold, flushed at EOS; named folds carry a
+                   segment implementation, so the mesh backend compiles
+                   the same IR node to one ``shard_map`` keyed shuffle
+``window``         ``Stage(_WindowNode)`` — tumbling n-item windows folded
+                   in-stream (host backends; the node is stateful, which
+                   the mesh cannot trace)
+=================  =========================================================
+
+Host fold state lives in the right vertices (one ``_KeyFold`` instance
+per partition — never shared), accumulates via ``svc`` and leaves the
+network through the EOS flush hook (``ff_node.svc_eos``), so a fold's
+results are on the wire *before* its vertex's EOS propagates — no side
+channel, no post-run collection step.
+"""
+from __future__ import annotations
+
+import operator
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Union
+
+from .a2a import _ident
+from .skeleton import GO_ON, AllToAll, EmitMany, Stage, ff_node
+
+__all__ = [
+    "Fold", "FOLDS", "KeyedReduce",
+    "partition_by", "reduce_by_key", "window",
+]
+
+
+def _count_step(acc: int, _x: Any) -> int:
+    return acc + 1
+
+
+@dataclass(frozen=True)
+class Fold:
+    """A named reduction: the host-side binary fold plus the mesh-side
+    segment kind.  ``seed_first=True`` seeds each key's accumulator with
+    its first item (sum/min/max — no neutral element needed, and int/float
+    types are preserved exactly); ``count`` instead starts from ``init``.
+
+    ``kind`` names the segment/collective implementation the mesh keyed
+    shuffle uses (``segment_sum``+``psum`` etc.); it is a string, not a
+    jax callable, so importing this module never touches jax."""
+
+    name: str
+    fn: Callable[[Any, Any], Any]
+    init: Any = None
+    seed_first: bool = True
+    kind: Optional[str] = None
+
+
+FOLDS = {
+    "sum": Fold("sum", operator.add, kind="sum"),
+    "min": Fold("min", min, kind="min"),
+    "max": Fold("max", max, kind="max"),
+    "count": Fold("count", _count_step, init=0, seed_first=False,
+                  kind="count"),
+}
+
+
+@dataclass(frozen=True)
+class KeyedReduce:
+    """The static part of a keyed reduction — what the mesh backend needs
+    to compile the shuffle as one ``shard_map`` program: the key function
+    (array-polymorphic, integer keys in ``[0, nkeys)``), the named fold,
+    and the key-space bound.  Host backends ignore it (their ``_KeyFold``
+    right nodes carry the same semantics dynamically)."""
+
+    by: Callable[[Any], Any]
+    fold: Fold
+    nkeys: Optional[int] = None
+
+
+class _KeyFold(ff_node):
+    """Right-vertex node of a keyed reduction: fold every arriving item
+    into its key's accumulator, emit nothing until EOS, then flush all
+    ``(key, fold)`` pairs (``svc_eos``) — one instance per partition, and
+    the shuffle guarantees each key visits exactly one instance."""
+
+    def __init__(self, by: Callable[[Any], Any], fn: Callable[[Any, Any], Any],
+                 init: Any = None, seed_first: bool = True):
+        self.by = by
+        self.fn = fn
+        self.init = init
+        self.seed_first = seed_first
+        self._acc: dict = {}
+
+    def svc(self, x):
+        k = self.by(x)
+        if k in self._acc:
+            self._acc[k] = self.fn(self._acc[k], x)
+        elif self.seed_first:
+            self._acc[k] = x
+        else:
+            self._acc[k] = self.fn(self.init, x)
+        return GO_ON
+
+    def svc_eos(self):
+        out = EmitMany(self._acc.items())
+        self._acc = {}
+        return out if out else None
+
+
+class _WindowNode(ff_node):
+    """Tumbling window: fold each run of ``n`` consecutive items into one
+    emission; the final partial window flushes at EOS."""
+
+    def __init__(self, n: int, fn: Callable[[Any, Any], Any],
+                 init: Any = None, seed_first: bool = True):
+        assert n >= 1
+        self.n = n
+        self.fn = fn
+        self.init = init
+        self.seed_first = seed_first
+        self._acc: Any = None
+        self._count = 0
+
+    def svc(self, x):
+        if self._count == 0:
+            self._acc = x if self.seed_first else self.fn(self.init, x)
+        else:
+            self._acc = self.fn(self._acc, x)
+        self._count += 1
+        if self._count < self.n:
+            return GO_ON
+        out, self._acc, self._count = self._acc, None, 0
+        return out
+
+    def svc_eos(self):
+        if self._count == 0:
+            return None
+        out, self._acc, self._count = self._acc, None, 0
+        return out
+
+
+def _resolve_fold(fold: Union[str, Fold, Callable], init: Any) \
+        -> tuple:
+    """-> (host fn, init, seed_first, Fold-or-None)."""
+    if isinstance(fold, Fold):
+        return fold.fn, fold.init, fold.seed_first, fold
+    if isinstance(fold, str):
+        try:
+            spec = FOLDS[fold]
+        except KeyError:
+            raise ValueError(
+                f"unknown fold {fold!r} (have {sorted(FOLDS)}, or pass a "
+                f"binary callable)") from None
+        return spec.fn, spec.init, spec.seed_first, spec
+    if callable(fold):
+        # custom binary fold: host backends only (no segment form); with
+        # no init the first item seeds the accumulator
+        return fold, init, init is None, None
+    raise ValueError(f"fold must be a name, Fold, or callable, got {fold!r}")
+
+
+def _worker_row(worker: Any, n: int) -> List[Any]:
+    if worker is None:
+        return [_ident] * n
+    if isinstance(worker, (list, tuple)):
+        assert len(worker) == n, "worker list must match partition count"
+        return list(worker)
+    if isinstance(worker, type):
+        return [worker() for _ in range(n)]  # fresh instance per partition
+    return [worker] * n  # shared by reference — stateless callers only
+
+
+def partition_by(by: Callable[[Any], Any], nparts: int,
+                 worker: Any = None, *, nleft: int = 1,
+                 scheduling: Any = "rr",
+                 name: str = "partition-by") -> AllToAll:
+    """Keyed repartition: every item whose key hashes alike is serviced by
+    the *same* right-vertex ``worker`` instance — keyed affinity as a
+    network, for per-key state that a reduction does not cover (dedup
+    sets, per-tenant caches, sticky sessions).
+
+    ``worker`` may be ``None`` (pure shuffle), one node/callable shared by
+    the row, a *class* (instantiated fresh per partition — the right way
+    to ship per-partition state), or a list of ``nparts`` nodes."""
+    return AllToAll(_ident, _worker_row(worker, nparts), by=by,
+                    nleft=nleft, nright=nparts, scheduling=scheduling,
+                    name=name)
+
+
+def reduce_by_key(by: Callable[[Any], Any],
+                  fold: Union[str, Fold, Callable] = "sum", *,
+                  init: Any = None, nleft: int = 1, nright: int = 2,
+                  nkeys: Optional[int] = None, left: Any = None,
+                  scheduling: Any = "rr",
+                  name: str = "reduce-by-key") -> AllToAll:
+    """Partitioned keyed reduction: shuffle by ``by``, fold each key's
+    items on the partition that owns it, flush ``(key, fold)`` pairs at
+    EOS (unordered — compare as a dict).
+
+    ``fold`` is a registry name (``"sum"``/``"min"``/``"max"``/
+    ``"count"``), a :class:`Fold`, or any binary callable (host backends
+    only).  Named folds make the node mesh-lowerable when ``nkeys`` bounds
+    the key space (``by`` must then be array-polymorphic with integer
+    keys in ``[0, nkeys)``).  ``left`` optionally maps items before the
+    shuffle (the columnar-explode stage of an aggregation pipeline)."""
+    fn, init, seed_first, spec = _resolve_fold(fold, init)
+    rights = [_KeyFold(by, fn, init, seed_first) for _ in range(nright)]
+    reduce_spec = (KeyedReduce(by=by, fold=spec, nkeys=nkeys)
+                   if spec is not None and spec.kind else None)
+    return AllToAll(left if left is not None else _ident, rights, by=by,
+                    nleft=nleft, nright=nright, scheduling=scheduling,
+                    reduce=reduce_spec, name=name)
+
+
+def window(n: int, fold: Union[str, Fold, Callable] = "sum", *,
+           init: Any = None, name: str = "window") -> Stage:
+    """Tumbling window: fold each run of ``n`` consecutive stream items
+    into one emission (partial tail flushes at EOS).  A single stateful
+    stage — threads and procs backends (the mesh cannot trace stream
+    state); composes freely before or after a shuffle."""
+    fn, init, seed_first, _ = _resolve_fold(fold, init)
+    return Stage(_WindowNode(n, fn, init, seed_first), name=name)

@@ -58,6 +58,68 @@ def big_payload(x):
     return ("#" * 5000, x)  # forces the shm ring's spill side-channel
 
 
+# -- all-to-all / stream_ops nodes (spawned children re-import these) --------
+def mod3(x):
+    return x % 3
+
+
+def mod5(x):
+    return x % 5
+
+
+def mod7(x):
+    return x % 7
+
+
+def double(x):
+    return x * 2
+
+
+def second(t):
+    return t[1]
+
+
+def mod2int(x):
+    # array-polymorphic float key: floor-div keeps it traceable on the
+    # mesh (host key 0.0 and mesh key 0 hash equal, so dicts agree)
+    return (x // 1) % 2
+
+
+def keep_larger(a, b):
+    return a if a >= b else b
+
+
+def emit_twice(x):
+    from repro.core import EmitMany
+    return EmitMany([x, x])
+
+
+class Dedup:
+    """Stateful per-partition worker: emits each value once (GO_ON after),
+    used to pin that partition_by instantiates worker classes fresh."""
+
+    def __init__(self):
+        self.seen = set()
+
+    def __call__(self, x):
+        from repro.core import GO_ON
+        if x in self.seen:
+            return GO_ON
+        self.seen.add(x)
+        return x
+
+
+class TagPartition:
+    """Right-row worker that stamps its partition index on every item —
+    lets tests observe which partition serviced which key."""
+
+    def __init__(self, j):
+        self.j = j
+
+    def __call__(self, x):
+        return (self.j, x)
+
+
 # -- ff_node-style emitter/collector -----------------------------------------
 class AddTagEmitter:
     """Emitter node: runs inside the dispatch arbiter's process."""

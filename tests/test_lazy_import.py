@@ -1,0 +1,51 @@
+"""Import hygiene for the host runtime (PR-4's PEP 562 lazy loading).
+
+The procs backend spawns one process per vertex and every child imports
+``repro.core`` cold; pulling jax (seconds of XLA start-up) into that path
+would silently multiply spawn cost by every vertex in every run.  These
+tests pin, via a *subprocess* (the parent test process has long since
+imported jax), that the host-side surface — ``repro.core`` and the whole
+all-to-all/stream_ops layer — never imports jax as a side effect."""
+import os
+import subprocess
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_isolated(code: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_core_import_stays_jax_free():
+    _run_isolated(
+        "import sys; import repro.core; "
+        "assert 'jax' not in sys.modules, 'repro.core imported jax'")
+
+
+def test_a2a_and_stream_ops_import_stays_jax_free():
+    """The new subsystem must keep the same discipline: the mesh program
+    class is importable, but jax loads only when it is instantiated."""
+    _run_isolated(
+        "import sys; "
+        "from repro.core import A2AMeshProgram, AllToAll, reduce_by_key, "
+        "partition_by, window, KeyAffinity; "
+        "import repro.core.a2a, repro.core.stream_ops; "
+        "assert 'jax' not in sys.modules, 'a2a/stream_ops imported jax'")
+
+
+def test_ir_construction_stays_jax_free():
+    """Building and thread-lowering a keyed reduction — the exact work a
+    spawned vertex's unpickle path does — must not touch jax either."""
+    _run_isolated(
+        "import sys\n"
+        "from repro.core import lower, reduce_by_key\n"
+        "def mod(x): return x % 3\n"
+        "out = dict(lower(reduce_by_key(mod, 'sum', nright=2), "
+        "'threads')(range(10)))\n"
+        "assert out == {0: 18, 1: 12, 2: 15}, out\n"
+        "assert 'jax' not in sys.modules, 'thread lowering imported jax'")
