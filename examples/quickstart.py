@@ -25,6 +25,12 @@ def _sq(x):
     return x * x
 
 
+def _dbl(x):
+    # array node: x is a numpy array, so `* 2.0` needs no import here —
+    # the child that services it gets numpy when it unpickles the payload
+    return x * 2.0
+
+
 def _inc(x):
     return x + 1
 
@@ -102,6 +108,22 @@ def main():
     by_mesh = dict(lower(rbk, "mesh")(range(32)))
     assert by_threads == by_procs == by_mesh
     print("reduce_by_key (threads == procs == mesh):", by_threads)
+
+    # -- 1e. zero-copy + batched lowering options (procs backend) ------------
+    # For array streams, size the ring slots to the payload (slot_size=)
+    # and numpy arrays travel as typed zero-copy slots: one aligned memcpy
+    # into shared memory per side instead of a pickle round-trip (pickle
+    # stays the fallback for arbitrary objects).  batch= packs several
+    # items per slot hand-off (an int, or "grain" to read each stage's
+    # declared grain), and spawned vertices come from a reusable process
+    # pool — a second lower(...) run pays no spawn cost (pool_stats()
+    # shows the reuse; opt out per-program with pool=False).
+    from repro.core import pool_stats
+    arrs = [np.full((1024,), float(i), np.float32) for i in range(12)]
+    zc = lower(Farm(_dbl, 2, ordered=True), "procs",
+               slot_size=8192, zero_copy=True, batch=4)(arrs)
+    assert all(np.array_equal(o, a * 2.0) for o, a in zip(zc, arrs))
+    print("zero-copy procs pool:", pool_stats())
 
     # -- 2. the paper's app: SW database search (host-only payloads) ---------
     rng = np.random.default_rng(0)

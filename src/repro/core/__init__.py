@@ -13,17 +13,18 @@
 # a vertex process that only needs the host runtime never pays for XLA.
 from .spsc import EOS, SPSCQueue
 from .lockq import LockQueue
-from .shm import ShmCounters, ShmRing
+from .shm import ShmCounters, ShmFlag, ShmRing
 from .sched import (SCHEDULERS, CostModel, KeyAffinity, OnDemand, RoundRobin,
                     Scheduler, WorkStealing, calibrate_handoff_us,
-                    make_scheduler)
+                    make_scheduler, spread_cpus)
 from .skeleton import (GO_ON, AllToAll, EmitMany, Farm, FarmStats, Feedback,
                        FnNode, FusedNode,
                        LatencyReservoir, LoweringError, MeshProgram, Pipeline,
                        Skeleton, Source, Stage, ThreadProgram, as_skeleton,
                        compose, ff_node, fuse, lower)
 from .graph import Accelerator, Graph, Net, Token, build
-from .procgraph import ProcAccelerator, ProcGraph, ProcProgram
+from .procgraph import (ProcAccelerator, ProcGraph, ProcProgram,
+                        pool_shutdown, pool_stats)
 from .a2a import A2AMeshProgram, stable_hash
 from .stream_ops import (FOLDS, Fold, KeyedReduce, partition_by,
                          reduce_by_key, window)
@@ -42,13 +43,14 @@ _LAZY = {
 }
 
 __all__ = [
-    "EOS", "SPSCQueue", "LockQueue", "ShmRing", "ShmCounters",
+    "EOS", "SPSCQueue", "LockQueue", "ShmRing", "ShmCounters", "ShmFlag",
     "GO_ON", "EmitMany", "Accelerator", "Farm", "Feedback", "Graph", "Net",
     "Pipeline", "AllToAll",
     "Skeleton", "Source", "Stage", "Token", "compose",
     "LoweringError", "MeshProgram", "ThreadProgram", "as_skeleton", "build",
     "lower", "fuse", "FusedNode",
     "ProcAccelerator", "ProcGraph", "ProcProgram",
+    "pool_stats", "pool_shutdown", "spread_cpus",
     "A2AMeshProgram", "stable_hash",
     "FOLDS", "Fold", "KeyedReduce", "partition_by", "reduce_by_key",
     "window",

@@ -19,8 +19,9 @@ threads (``graph.py``)         procs (this module)
 ``threading.Thread`` vertex    ``spawn``-ed ``multiprocessing.Process``
 ``SPSCQueue`` edge             ``ShmRing`` edge (pickled = attach by name)
 ``Graph.results`` list         a results ring drained by the calling process
-``Graph.failed`` list          a shared failure Event + a control queue
-                               carrying the exception back to the caller
+``Graph.failed`` list          a shared failure flag (:class:`ShmFlag`) + a
+                               per-vertex control ring carrying ready/error
+                               messages back to the caller
 ``TagSpace.entered/retired``   ``ShmCounters`` board: two single-writer
                                cache-line-separated u64s (dispatch writes
                                ``entered``, merge writes ``retired``)
@@ -34,9 +35,23 @@ threads (``graph.py``)         procs (this module)
 Single-writer discipline is preserved end to end: every ring has one
 producer and one consumer process; the quiescence board splits its
 counters by writer; the scheduling policy lives entirely inside the
-dispatch arbiter's process.  The only locked primitives are the *control
-plane* (ready/error messages on a ``multiprocessing.Queue``, the failure
-Event) — never on the data path, which is the paper's actual claim.
+dispatch arbiter's process.  Even the *control plane* is shared-memory
+SPSC: ready/error messages ride a per-vertex control ring (vertex →
+caller) and the failure signal is a :class:`~repro.core.shm.ShmFlag`
+(idempotent multi-writer store).  Nothing on any path needs a lock —
+and, unlike ``multiprocessing``'s Queue/Event, every control primitive
+pickles as a plain segment attach, which is what lets vertices ride
+through a queue to **pooled** worker processes.
+
+Spawn-pool reuse: starting a spawned interpreter costs ~0.1s (import of
+``repro.core`` dominates); a program that lowers the same skeleton
+repeatedly would pay it per run, per vertex.  ``run()`` therefore leases
+processes from a module-level pool (one per start method): each pooled
+worker loops ``job = jobq.get(); vertex._run()``, re-arming between
+graphs, so only the first run pays the spawn.  Workers whose graph
+failed or timed out are terminated and replaced; clean workers return to
+the pool.  Opt out per program (``lower(skel, "procs", pool=False)``)
+or globally (``REPRO_PROCS_POOL=0``).
 
 Constraints of the process world (all spawn-start-method induced):
 
@@ -53,15 +68,15 @@ runtime threads); override with ``REPRO_PROCS_START`` if you must.
 """
 from __future__ import annotations
 
+import atexit
 import os
 import pickle
-import queue as _queue_mod
 import time
 import multiprocessing as mp
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from .sched import Scheduler, make_scheduler
-from .shm import ShmCounters, ShmRing
+from .shm import ShmCounters, ShmFlag, ShmRing
 from .skeleton import (BACKENDS, GO_ON, AllToAll, EmitMany, Farm, FarmStats,
                        Feedback, LoweringError, Pipeline, Skeleton, Source,
                        Stage, _FarmEmitMany, _has_grained_stage, as_skeleton,
@@ -71,7 +86,7 @@ from .spsc import EOS, SPSCQueue
 __all__ = [
     "ProcGraph", "ProcVertex", "ProcStageVertex", "ProcDispatchVertex",
     "ProcWorkerVertex", "ProcMergeVertex", "build", "ProcProgram",
-    "ProcAccelerator",
+    "ProcAccelerator", "pool_stats", "pool_shutdown",
 ]
 
 _EMPTY = SPSCQueue._EMPTY
@@ -151,15 +166,179 @@ def _vertex_main(vertex: "ProcVertex") -> None:
     vertex._run()
 
 
+class _CtlRing:
+    """Vertex-side endpoint of the control ring (vertex → caller).
+
+    Wraps the ring behind a ``put()`` so vertex code keeps its queue-ish
+    control surface; the ring never legitimately fills (≤ 2 messages per
+    vertex against capacity 8), so a timeout here means the caller is
+    gone and the message is dropped rather than wedging teardown."""
+
+    __slots__ = ("_ring",)
+
+    def __init__(self, ring: ShmRing):
+        self._ring = ring
+
+    def put(self, msg: Tuple) -> None:
+        self._ring.push_wait(msg, timeout=10.0)
+
+
+# ---------------------------------------------------------------------------
+# the spawn pool: reusable vertex-host processes, one pool per start method
+# ---------------------------------------------------------------------------
+def _pool_main(jobq, doneq) -> None:
+    """Pooled vertex-host: run one vertex per job, then re-arm.  The spawn
+    and import cost is paid once per *process*, not once per run."""
+    base_cpus = None
+    if hasattr(os, "sched_getaffinity"):
+        try:
+            base_cpus = os.sched_getaffinity(0)
+        except OSError:  # pragma: no cover - exotic kernels
+            pass
+    while True:
+        vertex = jobq.get()
+        if vertex is None:
+            return
+        try:
+            _vertex_main(vertex)
+        finally:
+            if base_cpus is not None and vertex.cpus:
+                try:  # undo the vertex's pin: the next job chooses its own
+                    os.sched_setaffinity(0, base_cpus)
+                except OSError:  # pragma: no cover
+                    pass
+            vertex = None  # drop ring attachments before signalling done
+            doneq.put(True)
+
+
+class _PoolWorker:
+    """One leased process: a job queue in, a done-token queue out."""
+
+    __slots__ = ("jobq", "doneq", "proc", "busy")
+
+    def submit(self, vertex: "ProcVertex") -> None:
+        # SimpleQueue.put pickles synchronously in THIS thread — an
+        # unpicklable vertex raises here, before any bytes hit the pipe,
+        # so the worker stays clean and reusable
+        self.jobq.put(vertex)
+        self.busy = True
+
+    def poll_done(self) -> bool:
+        if self.busy:
+            while not self.doneq.empty():
+                self.doneq.get()
+                self.busy = False
+        return not self.busy
+
+
+class _ProcPool:
+    """Reusable spawned processes for one start method.
+
+    ``acquire`` hands out an idle worker (or spawns one), ``release``
+    parks it for the next graph.  Workers are generic vertex hosts — a
+    process that ran a farm worker last graph may run a merge arbiter in
+    the next — so the pool needs no shape bookkeeping, only liveness."""
+
+    MAX_IDLE = 12  # parked interpreters cost memory; beyond this, retire
+
+    def __init__(self, ctx):
+        self._ctx = ctx
+        self._idle: List[_PoolWorker] = []
+        self.spawned = 0  # telemetry: processes ever started
+        self.reused = 0   # telemetry: acquisitions that skipped a spawn
+
+    def acquire(self) -> _PoolWorker:
+        while self._idle:
+            w = self._idle.pop()
+            if w.proc.is_alive():
+                self.reused += 1
+                return w
+            self.discard(w)
+        w = _PoolWorker()
+        w.jobq = self._ctx.SimpleQueue()
+        w.doneq = self._ctx.SimpleQueue()
+        w.busy = False
+        self.spawned += 1
+        w.proc = self._ctx.Process(target=_pool_main,
+                                   args=(w.jobq, w.doneq),
+                                   name=f"ff-pool-{self.spawned}",
+                                   daemon=True)
+        w.proc.start()
+        return w
+
+    def release(self, w: _PoolWorker) -> None:
+        if w.proc.is_alive() and not w.busy \
+                and len(self._idle) < self.MAX_IDLE:
+            self._idle.append(w)
+        else:
+            self.discard(w)
+
+    def discard(self, w: _PoolWorker) -> None:
+        try:
+            if w.proc.is_alive() and not w.busy:
+                w.jobq.put(None)  # polite: let the loop return
+                w.proc.join(0.5)
+        except Exception:  # pragma: no cover - pipes may already be gone
+            pass
+        if w.proc.is_alive():
+            w.proc.terminate()
+            w.proc.join(5.0)
+        for q in (w.jobq, w.doneq):
+            try:
+                q.close()
+            except Exception:  # pragma: no cover
+                pass
+
+    def shutdown(self) -> None:
+        while self._idle:
+            self.discard(self._idle.pop())
+
+
+_POOLS: Dict[str, _ProcPool] = {}
+
+
+def _get_pool(ctx) -> _ProcPool:
+    key = ctx.get_start_method()
+    pool = _POOLS.get(key)
+    if pool is None:
+        pool = _POOLS[key] = _ProcPool(ctx)
+    return pool
+
+
+def _pool_enabled(pool: Optional[bool]) -> bool:
+    if pool is not None:
+        return pool
+    return os.environ.get("REPRO_PROCS_POOL", "1") != "0"
+
+
+def pool_stats() -> Dict[str, Dict[str, int]]:
+    """Spawn-pool telemetry per start method (spawned/reused/idle)."""
+    return {k: {"spawned": p.spawned, "reused": p.reused,
+                "idle": len(p._idle)}
+            for k, p in _POOLS.items()}
+
+
+def pool_shutdown() -> None:
+    """Retire every idle pooled worker (tests and interpreter exit)."""
+    for pool in _POOLS.values():
+        pool.shutdown()
+
+
+atexit.register(pool_shutdown)
+
+
 # ---------------------------------------------------------------------------
 # vertices: one spawned process each, private ShmRing endpoints
 # ---------------------------------------------------------------------------
 class ProcVertex:
     """A network vertex: one process, private shared-memory SPSC endpoints.
 
-    ``failed`` (Event) and ``ctl`` (Queue) are attached by
-    :meth:`ProcGraph.add` and pickle through ``Process`` args — the
-    control plane.  Everything else must be plain-picklable.
+    ``failed`` (:class:`ShmFlag`) and ``ctl`` (:class:`_CtlRing`) are
+    attached by :meth:`ProcGraph.add` — the control plane.  Both pickle
+    as segment attaches, so a vertex travels equally well through
+    ``Process`` args (direct spawn) and a pool worker's job queue.
+    ``cpus`` is an optional placement hint (see ``Scheduler.worker_cpus``)
+    applied best-effort on entry and undone by the pool between jobs.
     """
 
     def __init__(self, node: Optional[ff_node] = None, *,
@@ -168,12 +347,18 @@ class ProcVertex:
         self.name = name
         self.ins: List[ShmRing] = []
         self.outs: List[ShmRing] = []
-        self.failed: Any = None   # mp.Event, set by ProcGraph.add
-        self.ctl: Any = None      # mp.Queue, set by ProcGraph.add
+        self.failed: Any = None   # ShmFlag, set by ProcGraph.add
+        self.ctl: Any = None      # _CtlRing, set by ProcGraph.add
+        self.cpus: Optional[Tuple[int, ...]] = None
 
     # -- lifecycle (runs in the vertex's own process) -----------------------
     def _run(self) -> None:
         try:
+            if self.cpus:
+                try:
+                    os.sched_setaffinity(0, self.cpus)
+                except (AttributeError, OSError):  # hint only: never fatal
+                    pass
             if self.node is not None:
                 self.node.svc_init()
             self.ctl.put(("ready", self.name))
@@ -196,9 +381,9 @@ class ProcVertex:
 
     def _report_error(self, e: BaseException) -> None:
         self.failed.set()
-        # Queue.put pickles in a background feeder thread, so a pickling
-        # failure there would silently DROP the message — probe here, in
-        # this thread, and degrade an unpicklable exception to its repr.
+        # the control ring pickles synchronously in put(), so an
+        # unpicklable exception would raise mid-report and LOSE the
+        # message — probe first and degrade to the repr
         try:
             pickle.dumps(e)
         except Exception:
@@ -232,10 +417,48 @@ class ProcVertex:
 class ProcStageVertex(ProcVertex):
     """Generic vertex: nondeterministic fan-in merge, single-out.  With no
     inbound edges it is a *source*: ``svc(None)`` until ``None`` (EOS) —
-    paper Fig. 2's emitter protocol, same as ``graph.StageVertex``."""
+    paper Fig. 2's emitter protocol, same as ``graph.StageVertex``.
 
-    def __init__(self, node: ff_node, *, name: str = "ff-pstage"):
+    ``batch > 1`` turns on the batched-emit wire format: outputs gather
+    in a local buffer and ship ``batch`` at a time through
+    :meth:`ShmRing.push_many` — one slot header and one tail store per
+    run of items instead of per item, which is what lets fine-grain
+    streams amortize the per-hop cost.  The buffer is flushed after the
+    node's EOS hook and *before* the EOS sentinel leaves this vertex, so
+    stream ordering (including the eosnotify release of keyed folds) is
+    byte-identical to the unbatched wire."""
+
+    def __init__(self, node: ff_node, *, name: str = "ff-pstage",
+                 batch: int = 1):
         super().__init__(node, name=name)
+        self.batch = max(1, int(batch))
+        self._obuf: List[Any] = []
+
+    def _deliver(self, payload: Any) -> None:
+        if self.batch <= 1:
+            super()._deliver(payload)
+            return
+        self._obuf.append(payload)
+        if len(self._obuf) >= self.batch:
+            self._flush_batch()
+
+    def _flush_batch(self) -> None:
+        buf = self._obuf
+        if not buf:
+            return
+        out = self.outs[0]
+        backoff = _Backoff()
+        i = 0
+        while i < len(buf):
+            n = out.push_many(buf[i:] if i else buf)
+            if n:
+                i += n
+                continue
+            if self.failed.is_set():
+                self._obuf = []
+                raise _Aborted()
+            backoff.idle()
+        self._obuf = []
 
     def _loop(self) -> None:
         if not self.ins:  # source
@@ -247,6 +470,7 @@ class ProcStageVertex(ProcVertex):
                     continue
                 self._emit(out)
             self._flush_eos()
+            self._flush_batch()
             return
         eos: set = set()
         backoff = _Backoff()
@@ -275,8 +499,12 @@ class ProcStageVertex(ProcVertex):
             else:
                 if self.failed.is_set():
                     raise _Aborted()
+                # nothing inbound: ship the partial batch rather than
+                # holding the stream's tail hostage to the batch size
+                self._flush_batch()
                 backoff.idle()
         self._flush_eos()
+        self._flush_batch()
 
     def _flush_eos(self) -> None:
         """EOS flush (eosnotify), mirroring ``graph.StageVertex``: the node
@@ -698,22 +926,35 @@ class ProcGraph:
 
     Mirrors :class:`graph.Graph`'s API (``add``/``connect``/``run``/
     ``wait``) with process semantics: the caller is the single consumer of
-    the results ring, errors arrive over the control queue, and ``wait``
-    tears everything down — joins (or terminates, after ``timeout``) every
-    vertex and unlinks every shared-memory segment, so no run leaks
-    processes or ``/dev/shm`` entries."""
+    the results ring, errors arrive over per-vertex control rings, and
+    ``wait`` tears everything down — returns pooled workers (or joins /
+    terminates direct-spawned ones) and unlinks every shared-memory
+    segment, so no run leaks processes or ``/dev/shm`` entries.
 
-    def __init__(self, *, capacity: int = 512, slot_size: int = 248):
+    ``zero_copy`` flows to every edge ring (typed buffer-protocol slots);
+    ``batch`` turns on batched emit for stage vertices — ``None`` off,
+    an int for a global batch size, or ``"grain"`` to read each stage's
+    declared ``grain=`` as its batch size; ``pool`` selects spawn-pool
+    reuse (default: on unless ``REPRO_PROCS_POOL=0``)."""
+
+    def __init__(self, *, capacity: int = 512, slot_size: int = 248,
+                 zero_copy: bool = True, batch: Any = None,
+                 pool: Optional[bool] = None):
         self.capacity = capacity
         self.slot_size = slot_size
+        self.zero_copy = zero_copy
+        self.batch = batch
         self._ctx = _start_ctx()
+        self._pool = _get_pool(self._ctx) if _pool_enabled(pool) else None
         self.vertices: List[ProcVertex] = []
         self.results: List[Any] = []
         self.failed: List[BaseException] = []
-        self.ctl = self._ctx.Queue()
-        self.failed_event = self._ctx.Event()
         self._rings: List[Any] = []          # every segment, for unlink
+        self.failed_event = ShmFlag()
+        self._rings.append(self.failed_event)
+        self._ctl_rings: List[ShmRing] = []  # one per vertex, vertex->caller
         self._procs: List[Any] = []
+        self._pool_workers: List[_PoolWorker] = []
         self._farm_stats: List[Tuple[Farm, ShmRing]] = []
         self._results_rings: List[ShmRing] = []
         self._eos_rings: set = set()
@@ -725,7 +966,8 @@ class ProcGraph:
     def channel(self, capacity: Optional[int] = None,
                 slot_size: Optional[int] = None) -> ShmRing:
         ring = ShmRing(capacity or self.capacity,
-                       slot_size or self.slot_size)
+                       slot_size or self.slot_size,
+                       zero_copy=self.zero_copy)
         self._rings.append(ring)
         return ring
 
@@ -734,9 +976,23 @@ class ProcGraph:
         self._rings.append(board)
         return board
 
+    def batch_for(self, grain: Optional[int]) -> int:
+        """Resolve the effective emit-batch size for a stage declaring
+        ``grain`` (1 = unbatched; see the class docstring)."""
+        if self.batch is None:
+            return 1
+        if self.batch == "grain":
+            return int(grain) if grain else 1
+        return max(1, int(self.batch))
+
     def add(self, v: ProcVertex) -> ProcVertex:
         v.failed = self.failed_event
-        v.ctl = self.ctl
+        # control edge: SPSC (this vertex produces, the caller consumes);
+        # plain pickle — identity and fidelity over speed off the data path
+        ring = ShmRing(8, 512, zero_copy=False)
+        self._rings.append(ring)
+        self._ctl_rings.append(ring)
+        v.ctl = _CtlRing(ring)
         self.vertices.append(v)
         return v
 
@@ -764,41 +1020,56 @@ class ProcGraph:
     # -- execution ----------------------------------------------------------
     def run(self) -> "ProcGraph":
         assert not self._procs, "graph already running"
+        pickling_errors = (pickle.PicklingError, AttributeError, TypeError)
+        if self._pool is not None:
+            for v in self.vertices:
+                w = self._pool.acquire()
+                try:
+                    w.submit(v)
+                except pickling_errors as e:
+                    self._pool.release(w)  # put failed pre-pipe: still clean
+                    self.shutdown()
+                    raise self._lowering_error(e) from e
+                self._pool_workers.append(w)
+                self._procs.append(w.proc)
+            return self
         try:
             for v in self.vertices:
                 p = self._ctx.Process(target=_vertex_main, args=(v,),
                                       name=v.name, daemon=True)
                 p.start()
                 self._procs.append(p)
-        except (pickle.PicklingError, AttributeError, TypeError) as e:
+        except pickling_errors as e:
             self.shutdown()
-            raise LoweringError(
-                f"the procs backend spawns vertices, so nodes/payloads/"
-                f"policies must be picklable (module-level functions, "
-                f"functools.partial, or ff_node subclasses — not lambdas "
-                f"or closures): {e!r}") from e
+            raise self._lowering_error(e) from e
         return self
+
+    @staticmethod
+    def _lowering_error(e: BaseException) -> LoweringError:
+        return LoweringError(
+            f"the procs backend spawns vertices, so nodes/payloads/"
+            f"policies must be picklable (module-level functions, "
+            f"functools.partial, or ff_node subclasses — not lambdas "
+            f"or closures): {e!r}")
 
     def wait_ready(self, timeout: float = 60.0) -> None:
         """Block until every vertex has finished ``svc_init`` (used to
         exclude spawn/import cost from steady-state measurements)."""
         deadline = time.monotonic() + timeout
         while self._ready < len(self.vertices):
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
+            if time.monotonic() > deadline:
                 self.shutdown()
                 raise TimeoutError(
                     f"procs graph: {self._ready}/{len(self.vertices)} "
                     f"vertices ready after {timeout}s")
-            try:
-                msg = self.ctl.get(timeout=min(remaining, 0.5))
-            except _queue_mod.Empty:
+            self._drain_ctl()
+            if not self.failed:
                 self._check_liveness()
-                continue
-            self._on_ctl(msg)
             if self.failed:
                 self.shutdown()
                 raise self.failed[0]
+            if self._ready < len(self.vertices):
+                time.sleep(0.002)
 
     def poll_results(self) -> bool:
         """Drain whatever the results rings hold right now (non-blocking).
@@ -828,11 +1099,20 @@ class ProcGraph:
                 exc if exc is not None else RuntimeError(f"{name}: {rep}"))
 
     def _drain_ctl(self) -> None:
-        while True:
-            try:
-                self._on_ctl(self.ctl.get_nowait())
-            except _queue_mod.Empty:
-                return
+        for ring in self._ctl_rings:
+            while True:
+                msg = ring.pop()
+                if msg is _EMPTY:
+                    break
+                self._on_ctl(msg)
+
+    def _all_vertices_exited(self) -> bool:
+        if self._pool is not None:
+            return bool(self._pool_workers) and all(
+                w.poll_done() or not w.proc.is_alive()
+                for w in self._pool_workers)
+        return bool(self._procs) and all(not p.is_alive()
+                                         for p in self._procs)
 
     def _check_liveness(self) -> None:
         for p in self._procs:
@@ -843,8 +1123,7 @@ class ProcGraph:
                         f"vertex process {p.name!r} died with exit code "
                         f"{p.exitcode} (killed?)"))
                 return
-        if self._procs and self._results_rings \
-                and all(not p.is_alive() for p in self._procs) \
+        if self._results_rings and self._all_vertices_exited() \
                 and not self.poll_results():
             self._drain_ctl()
             if not self.failed:  # pragma: no cover - defensive
@@ -886,14 +1165,8 @@ class ProcGraph:
                 backoff.idle()
             if timed_out or self.failed:
                 self.failed_event.set()  # unblock every vertex
-            for p in self._procs:
-                grace = 10.0 if deadline is None \
-                    else max(0.1, deadline - time.monotonic())
-                p.join(grace if not (timed_out or self.failed) else 2.0)
-            for p in self._procs:
-                if p.is_alive():
-                    p.terminate()
-                    p.join(5.0)
+            self._join_vertices(deadline,
+                                aborting=timed_out or bool(self.failed))
             self._drain_ctl()
             if self.failed_event.is_set() and not self.failed \
                     and not timed_out:  # timeout sets the flag itself
@@ -922,14 +1195,59 @@ class ProcGraph:
             if snap is not _EMPTY and isinstance(snap, FarmStats):
                 _fold_stats(farm.stats, snap)
 
-    def shutdown(self) -> None:
-        """Hard stop: terminate live vertices, unlink all shared memory."""
-        self.failed_event.set()
+    def _join_vertices(self, deadline: Optional[float],
+                       aborting: bool) -> None:
+        """Wait for every vertex to finish, then hand processes back.
+
+        Pool mode: poll each worker's done token; clean live workers
+        return to the pool, wedged or dead ones are terminated and
+        retired (a failed graph must never donate a poisoned process).
+        Direct-spawn mode: join, then terminate stragglers — as before.
+        """
+        if self._pool is not None:
+            grace = 2.0 if aborting else (
+                10.0 if deadline is None
+                else max(0.1, deadline - time.monotonic()))
+            end = time.monotonic() + grace
+            while time.monotonic() < end:
+                if all(w.poll_done() or not w.proc.is_alive()
+                       for w in self._pool_workers):
+                    break
+                time.sleep(0.001)
+            for w in self._pool_workers:
+                if w.poll_done() and w.proc.is_alive():
+                    self._pool.release(w)
+                else:
+                    w.proc.terminate()
+                    w.proc.join(5.0)
+                    self._pool.discard(w)
+            self._pool_workers = []
+            self._procs = []
+            return
+        for p in self._procs:
+            grace = 10.0 if deadline is None \
+                else max(0.1, deadline - time.monotonic())
+            p.join(grace if not aborting else 2.0)
         for p in self._procs:
             if p.is_alive():
                 p.terminate()
-        for p in self._procs:
-            p.join(5.0)
+                p.join(5.0)
+
+    def shutdown(self) -> None:
+        """Hard stop: abort live vertices, unlink all shared memory.
+
+        Pooled workers get a short grace to notice the failure flag and
+        finish their job cleanly (so the pool keeps them); anything still
+        busy after that is terminated and retired."""
+        self.failed_event.set()
+        if self._pool is not None:
+            self._join_vertices(time.monotonic() + 1.0, aborting=True)
+        else:
+            for p in self._procs:
+                if p.is_alive():
+                    p.terminate()
+            for p in self._procs:
+                p.join(5.0)
         self._cleanup()
 
     def _cleanup(self) -> None:
@@ -938,8 +1256,6 @@ class ProcGraph:
         self._cleaned = True
         for ring in self._rings:
             ring.unlink()
-        self.ctl.close()
-        self.ctl.join_thread()
 
 
 # ---------------------------------------------------------------------------
@@ -958,7 +1274,8 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
 
     if isinstance(skel, Source):
         assert in_ring is None, "Source cannot have an upstream edge"
-        return build(Stage(skel.node, name=skel.name), g, None, terminal)
+        return build(Stage(skel.node, name=skel.name, grain=skel.grain),
+                     g, None, terminal)
 
     if isinstance(skel, Pipeline):
         ring = in_ring
@@ -1010,6 +1327,7 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
             w = g.add(ProcWorkerVertex(node, i, idle_ring=idle,
                                        service_ring=service,
                                        name=f"ff-pworker-{i}"))
+            w.cpus = sched.worker_cpus(i, len(skel.worker_nodes))
             g.connect(disp, w, capacity=cap)
             g.connect(w, merge, capacity=cap)
         if terminal:
@@ -1020,7 +1338,8 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
         return ring
 
     if isinstance(skel, Stage):
-        v = g.add(ProcStageVertex(skel.node, name=skel.name))
+        v = g.add(ProcStageVertex(skel.node, name=skel.name,
+                                  batch=g.batch_for(skel.grain)))
         v.ins.extend(ring_list(in_ring))
         if terminal:
             v.outs.append(g.results_ring())
@@ -1042,13 +1361,20 @@ class ProcProgram:
     terminated (and all shared memory unlinked) instead of wedging the
     caller.  ``fuse`` is the same grain-aware pass as the threads backend
     — with processes costing more per vertex than threads, collapsing
-    sub-threshold hand-offs pays off even sooner."""
+    sub-threshold hand-offs pays off even sooner.
+
+    Data-plane options (see :class:`ProcGraph`): ``zero_copy`` (typed
+    buffer-protocol slots, default on), ``batch`` (batched emit: ``None``
+    off / int / ``"grain"``), ``pool`` (spawn-pool reuse; ``None`` =
+    honour ``REPRO_PROCS_POOL``, default on)."""
 
     backend = "procs"
 
     def __init__(self, skeleton: Skeleton, *, capacity: int = 512,
                  slot_size: int = 248, timeout: Optional[float] = 120.0,
-                 fuse: Any = "auto", fuse_threshold_us: Optional[float] = None):
+                 fuse: Any = "auto", fuse_threshold_us: Optional[float] = None,
+                 zero_copy: bool = True, batch: Any = None,
+                 pool: Optional[bool] = None):
         if fuse and isinstance(skeleton, Pipeline):
             force = fuse is True
             thr = fuse_threshold_us
@@ -1060,9 +1386,14 @@ class ProcProgram:
         self.capacity = capacity
         self.slot_size = slot_size
         self.timeout = timeout
+        self.zero_copy = zero_copy
+        self.batch = batch
+        self.pool = pool
 
     def to_graph(self, stream: Optional[Iterable[Any]] = None) -> ProcGraph:
-        g = ProcGraph(capacity=self.capacity, slot_size=self.slot_size)
+        g = ProcGraph(capacity=self.capacity, slot_size=self.slot_size,
+                      zero_copy=self.zero_copy, batch=self.batch,
+                      pool=self.pool)
         skel = (self.skeleton if stream is None
                 else Pipeline(Source(stream), self.skeleton))
         try:
@@ -1109,9 +1440,11 @@ class ProcAccelerator:
     blocking cycle through itself."""
 
     def __init__(self, net: Any, *, capacity: int = 512,
-                 slot_size: int = 248, ready_timeout: float = 60.0):
+                 slot_size: int = 248, ready_timeout: float = 60.0,
+                 zero_copy: bool = True, pool: Optional[bool] = None):
         skel = as_skeleton(net)
-        self._g = ProcGraph(capacity=capacity, slot_size=slot_size)
+        self._g = ProcGraph(capacity=capacity, slot_size=slot_size,
+                            zero_copy=zero_copy, pool=pool)
         self._farm: Optional[Farm] = None
         try:
             if self._caller_side_ok(skel):
@@ -1154,6 +1487,7 @@ class ProcAccelerator:
                 self._service_rings.append(service)
             w = g.add(ProcWorkerVertex(node, i, service_ring=service,
                                        name=f"ff-pworker-{i}"))
+            w.cpus = self._sched.worker_cpus(i, len(skel.worker_nodes))
             q_in, q_out = g.channel(cap), g.channel(cap)
             w.ins.append(q_in)
             w.outs.append(q_out)

@@ -44,19 +44,36 @@ calibrate itself.
 """
 from __future__ import annotations
 
+import os
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Type
+from typing import Any, Callable, Dict, List, Optional, Tuple, Type
 
 from .spsc import SPSCQueue
 
 __all__ = [
     "Scheduler", "RoundRobin", "OnDemand", "WorkStealing", "CostModel",
     "KeyAffinity",
-    "SCHEDULERS", "make_scheduler", "calibrate_handoff_us",
+    "SCHEDULERS", "make_scheduler", "calibrate_handoff_us", "spread_cpus",
 ]
 
 _EMPTY = SPSCQueue._EMPTY
+
+
+def spread_cpus(index: int, nworkers: int) -> Optional[Tuple[int, ...]]:
+    """Partition the process's allowed CPUs round-robin over ``nworkers``
+    and return worker ``index``'s share (``None`` where the platform has
+    no affinity API).  With more workers than CPUs the shares wrap, so
+    every worker still gets a non-empty set."""
+    try:
+        cpus = sorted(os.sched_getaffinity(0))
+    except (AttributeError, OSError):  # pragma: no cover - non-Linux
+        return None
+    if not cpus or nworkers <= 0:  # pragma: no cover - defensive
+        return None
+    share = tuple(cpus[index % len(cpus)::nworkers]) if nworkers <= len(cpus) \
+        else (cpus[index % len(cpus)],)
+    return share or (cpus[index % len(cpus)],)
 
 
 class Scheduler:
@@ -86,6 +103,11 @@ class Scheduler:
     # policy backlog cannot buffer an unbounded stream (ring-capacity
     # backpressure, re-established one level up)
     high_water: Optional[int] = None
+    # opt-in placement hint: when True, ``worker_cpus`` spreads the farm's
+    # workers over the allowed CPUs and the procs backend pins each worker
+    # process (best-effort ``sched_setaffinity``; the spawn pool undoes
+    # the pin when it re-arms a process for the next graph)
+    pin_cpus = False
 
     def __init__(self) -> None:
         self.outs: List[Any] = []
@@ -98,6 +120,16 @@ class Scheduler:
 
     def worker_channel(self, index: int, channel: Callable[[int], Any]):
         return None
+
+    def worker_cpus(self, index: int,
+                    nworkers: int) -> Optional[Tuple[int, ...]]:
+        """Placement hint: CPUs worker ``index`` should be pinned to, or
+        ``None`` for no pin.  Consumed at build time by the procs backend
+        (``ProcVertex.cpus``); the threads backend ignores it (one
+        process, the OS balances threads)."""
+        if not self.pin_cpus:
+            return None
+        return spread_cpus(index, nworkers)
 
     def bind(self, outs: List[Any], stats: Any) -> None:
         self.outs = outs

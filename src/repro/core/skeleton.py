@@ -379,11 +379,15 @@ class Stage(Skeleton):
 
 class Source(Skeleton):
     """A stream source: an ``ff_node`` (``svc(None)`` protocol) or any
-    iterable, replayed then EOS."""
+    iterable, replayed then EOS.  ``grain`` carries the same per-stage
+    hint as :class:`Stage` (the procs backend's ``batch="grain"`` reads
+    it as the source's emit-batch size)."""
 
-    def __init__(self, items: Any, *, name: str = "ff-source"):
+    def __init__(self, items: Any, *, name: str = "ff-source",
+                 grain: Optional[int] = None):
         self.node = items if isinstance(items, ff_node) else _SeqNode(items)
         self.name = name
+        self.grain = grain
 
 
 class Pipeline(Skeleton):

@@ -26,7 +26,45 @@ from __future__ import annotations
 import time
 from typing import Any, List, Optional
 
-__all__ = ["SPSCQueue", "EOS"]
+__all__ = ["SPSCQueue", "EOS", "Backoff"]
+
+
+class Backoff:
+    """Truncated-exponential spin/yield backoff for the blocking helpers.
+
+    One instance per ``push_wait``/``pop_wait`` call: 64 pure spins (the
+    uncontended hand-off resolves in nanoseconds), then sleeps that double
+    from 20µs up to a 1ms cap.  ``pause`` checks the deadline *before*
+    sleeping and never sleeps past it, so a blocking call returns within
+    ``timeout`` plus at most one scheduler quantum — not ``timeout`` plus
+    a full backoff step.  Shared by ``SPSCQueue`` and ``ShmRing`` so the
+    two rings keep identical blocking semantics.
+    """
+
+    __slots__ = ("_spins", "_delay")
+
+    SPINS = 64
+    FLOOR = 0.000_02
+    CAP = 0.001
+
+    def __init__(self) -> None:
+        self._spins = 0
+        self._delay = self.FLOOR
+
+    def pause(self, deadline: Optional[float] = None) -> bool:
+        """Back off once; returns False when the deadline has passed."""
+        if self._spins < self.SPINS:
+            self._spins += 1
+            return True
+        if deadline is None:
+            time.sleep(self._delay)
+        else:
+            now = time.monotonic()
+            if now >= deadline:
+                return False
+            time.sleep(min(self._delay, deadline - now))
+        self._delay = min(self._delay * 2.0, self.CAP)
+        return True
 
 
 class _EOS:
@@ -75,7 +113,9 @@ class SPSCQueue:
             size <<= 1
         self._buf: List[Any] = [None] * size
         self._mask = size - 1
-        # Producer-private and consumer-private indices (monotonic ints).
+        # Producer-private and consumer-private indices, stored masked to
+        # the ring size (not monotonic: every advance re-wraps with
+        # ``& _mask``, so len()/full() mask both sides before comparing).
         self._head = 0  # next slot to read  (consumer writes)
         self._tail = 0  # next slot to write (producer writes)
         self.pushes = 0
@@ -110,12 +150,9 @@ class SPSCQueue:
     def push_wait(self, item: Any, timeout: Optional[float] = None) -> bool:
         """Blocking enqueue with spin/yield backoff."""
         deadline = None if timeout is None else time.monotonic() + timeout
-        spins = 0
+        backoff = Backoff()
         while not self.push(item):
-            spins += 1
-            if spins > 64:
-                time.sleep(0.000_05)
-            if deadline is not None and time.monotonic() > deadline:
+            if not backoff.pause(deadline):
                 return False
         return True
 
@@ -140,13 +177,10 @@ class SPSCQueue:
         Returns ``SPSCQueue._EMPTY`` on timeout.
         """
         deadline = None if timeout is None else time.monotonic() + timeout
-        spins = 0
+        backoff = Backoff()
         while True:
             item = self.pop()
             if item is not SPSCQueue._EMPTY:
                 return item
-            spins += 1
-            if spins > 64:
-                time.sleep(0.000_05)
-            if deadline is not None and time.monotonic() > deadline:
+            if not backoff.pause(deadline):
                 return SPSCQueue._EMPTY

@@ -152,8 +152,17 @@ class _WindowNode(ff_node):
 
 def _resolve_fold(fold: Union[str, Fold, Callable], init: Any) \
         -> tuple:
-    """-> (host fn, init, seed_first, Fold-or-None)."""
+    """-> (host fn, init, seed_first, Fold-or-None).
+
+    A registry name or :class:`Fold` carries its own seed, so a
+    user-passed ``init=`` would be silently discarded — that conflict is
+    an error, not a preference fight the spec always wins."""
     if isinstance(fold, Fold):
+        if init is not None:
+            raise ValueError(
+                f"init={init!r} conflicts with the Fold spec "
+                f"{fold.name!r}, which already defines init={fold.init!r}"
+                f" — pass a bare callable to use a custom seed")
         return fold.fn, fold.init, fold.seed_first, fold
     if isinstance(fold, str):
         try:
@@ -162,6 +171,11 @@ def _resolve_fold(fold: Union[str, Fold, Callable], init: Any) \
             raise ValueError(
                 f"unknown fold {fold!r} (have {sorted(FOLDS)}, or pass a "
                 f"binary callable)") from None
+        if init is not None:
+            raise ValueError(
+                f"init={init!r} conflicts with the named fold {fold!r}, "
+                f"which already defines init={spec.init!r} — pass a bare "
+                f"callable to use a custom seed")
         return spec.fn, spec.init, spec.seed_first, spec
     if callable(fold):
         # custom binary fold: host backends only (no segment form); with

@@ -147,6 +147,13 @@ class NegateCollector:
         return -task
 
 
+def np_double(x):
+    # numpy payload node: lazy import, so children that never service an
+    # array keep their cold import cheap (and repro.core stays numpy-free)
+    import numpy as np
+    return np.asarray(x) * 2.0
+
+
 # -- child targets for test_shm ----------------------------------------------
 def echo_child(inbound, outbound):
     """Pop until EOS; report whether each sentinel kept identity."""
@@ -164,3 +171,19 @@ def echo_child(inbound, outbound):
 
 def bump_child(board):
     board.add(1, 5)  # slot 1 is this process's single-writer counter
+
+
+def set_flag_child(flag):
+    flag.set()
+
+
+def np_sum_child(inbound, outbound):
+    """Pop numpy arrays until EOS; reply (dtype str, shape, scalar sum)
+    per array so the parent can assert zero-copy decode fidelity."""
+    from repro.core import EOS
+    while True:
+        item = inbound.pop_wait(timeout=30)
+        if item is EOS:
+            return
+        outbound.push_wait(
+            (item.dtype.str, item.shape, float(item.sum())), timeout=30)

@@ -367,3 +367,38 @@ def test_ordered_reduce_is_rejected_at_ir():
 def test_unknown_fold_name():
     with pytest.raises(ValueError, match="unknown fold"):
         reduce_by_key(N.mod3, "median")
+
+
+# -- init= conflicts with a self-seeding fold spec (regression) --------------
+def test_init_conflicts_with_named_fold():
+    with pytest.raises(ValueError, match="conflicts with the named fold"):
+        reduce_by_key(N.mod3, "sum", init=5)
+    with pytest.raises(ValueError, match="conflicts with the named fold"):
+        window(3, "count", init=2)
+    with pytest.raises(ValueError, match="conflicts with the named fold"):
+        reduce_by_key(N.mod3, "count", init=0)  # 0 is a conflict, not falsy
+
+
+def test_init_conflicts_with_fold_spec():
+    from repro.core import FOLDS
+    with pytest.raises(ValueError, match="conflicts with the Fold spec"):
+        reduce_by_key(N.mod3, FOLDS["max"], init=0)
+    with pytest.raises(ValueError, match="conflicts with the Fold spec"):
+        window(2, FOLDS["min"], init=1)
+
+
+def test_init_with_bare_callable_seeds_the_accumulator():
+    # the documented escape hatch: a bare callable takes a custom seed
+    out = lower(window(2, N.keep_larger, init=100), "threads")([3, 7, 50, 9])
+    assert out == [100, 100]  # every window folds from the 100 seed
+    skel = reduce_by_key(N.mod3, N.keep_larger, init=1000)
+    assert dict(lower(skel, "threads")([5, 9, 14])) == {0: 1000, 2: 1000}
+
+
+# -- three backends, same skeleton objects, new lowering options -------------
+def test_three_backend_parity_with_batched_zero_copy_procs():
+    xs = list(range(64))
+    want = ref_rbk(xs, N.mod5, lambda a, b: a + b)
+    assert dict(lower(RBK, "threads")(xs)) == want
+    assert dict(lower(RBK, "procs", batch=8, zero_copy=True)(xs)) == want
+    assert dict(lower(RBK, "mesh")(xs)) == want

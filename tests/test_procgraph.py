@@ -166,3 +166,55 @@ def test_program_source_wrapping_matches_explicit_source():
     prog = lower(Pipeline(Source(xs), Farm(N.f, 2, ordered=True)), "procs")
     g = prog.to_graph()
     assert g.run_and_wait(60) == [N.f(x) for x in xs]
+
+
+# -- spawn-pool reuse + the new lowering options -----------------------------
+def test_spawn_pool_reuses_processes():
+    from repro.core import pool_stats
+    want = [N.f(x) for x in range(30)]
+    assert lower(Farm(N.f, 2, ordered=True), "procs")(list(range(30))) == want
+    before = pool_stats()
+    assert lower(Farm(N.f, 2, ordered=True), "procs")(list(range(30))) == want
+    after = pool_stats()
+
+    def total(stats, key):
+        return sum(v[key] for v in stats.values())
+
+    # the second run's 4 vertices (disp + merge + 2 workers) all came from
+    # the pool: zero fresh spawns, at least 4 reuses
+    assert total(after, "spawned") == total(before, "spawned")
+    assert total(after, "reused") >= total(before, "reused") + 4
+
+
+def test_pool_opt_out_direct_spawn_still_works():
+    xs = list(range(20))
+    prog = lower(Farm(N.f, 2, ordered=True), "procs", pool=False)
+    assert prog(xs) == [N.f(x) for x in xs]
+
+
+def test_batched_emit_matches_unbatched():
+    xs = list(range(80))
+    want = [N.g(N.f(x)) for x in xs]
+    skel = Pipeline(Stage(N.f), Stage(N.g))
+    assert lower(skel, "procs", batch=16)(xs) == want
+    assert lower(Pipeline(Stage(N.f), Stage(N.g)), "procs", batch=1)(xs) == want
+
+
+def test_batch_grain_reads_stage_grain():
+    xs = list(range(60))
+    skel = Pipeline(Source(xs), Stage(N.f, grain=8), Stage(N.g, grain=8))
+    # fuse=False: grain must feed the emit-batch size here, not the fusion
+    # pass (which reads it as µs of work)
+    prog = lower(skel, "procs", batch="grain", fuse=False)
+    assert prog.to_graph().run_and_wait(60) == [N.g(N.f(x)) for x in xs]
+
+
+def test_numpy_payloads_through_zero_copy_farm():
+    np = pytest.importorskip("numpy")
+    xs = [np.full((32,), float(i), dtype=np.float32) for i in range(24)]
+    skel = Farm(N.np_double, 2, ordered=True)
+    out = lower(skel, "procs", batch=4, zero_copy=True)(xs)
+    assert len(out) == len(xs)
+    for got, x in zip(out, xs):
+        assert got.dtype == np.float32 and got.shape == (32,)
+        assert np.array_equal(got, x * 2.0)

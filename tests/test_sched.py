@@ -362,3 +362,32 @@ def test_long_farm_run_keeps_latency_sample_bounded():
     assert farm.stats.tasks_collected == n
     assert len(farm.stats.latencies) <= 2048
     assert farm.stats.latencies.count == n
+
+
+# -- CPU placement hints (consumed by the procs backend's vertices) ----------
+def test_spread_cpus_partitions_the_affinity_set():
+    import os
+    from repro.core import spread_cpus
+    cpus = sorted(os.sched_getaffinity(0))
+    n = min(2, len(cpus))
+    shares = [spread_cpus(i, n) for i in range(n)]
+    assert all(s for s in shares)
+    flat = sorted(c for s in shares for c in s)
+    assert flat == cpus  # disjoint shares that cover every allowed CPU
+    # more workers than CPUs: each still gets one CPU, wrapping around
+    one = spread_cpus(0, len(cpus) + 5)
+    assert one is not None and len(one) == 1 and one[0] in cpus
+
+
+def test_worker_cpus_gated_by_pin_cpus():
+    from repro.core import spread_cpus
+
+    class Pinning(Scheduler):
+        pin_cpus = True
+
+        def route(self, nworkers, task, stats):
+            return 0
+
+    assert Scheduler.pin_cpus is False
+    assert RoundRobin().worker_cpus(0, 2) is None  # hints are opt-in
+    assert Pinning().worker_cpus(1, 2) == spread_cpus(1, 2)

@@ -1,16 +1,21 @@
 """Shared-memory SPSC ring: FIFO/lossless invariants, wrap-around,
-oversized-payload spill, EOS identity across process boundaries, and
-clean SharedMemory unlink — the procs backend's edge primitive must be
-as bulletproof as the in-process ring it mirrors."""
+typed zero-copy slots, batched emit, oversized-payload spill (including
+the decode-failure and spill-dir-pinning regressions), EOS identity
+across process boundaries, and clean SharedMemory unlink — the procs
+backend's edge primitive must be as bulletproof as the in-process ring
+it mirrors."""
 import glob
 import os
 import pickle
+import tempfile
 import threading
+import time
+import uuid
 
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import EOS, GO_ON, ShmCounters, ShmRing, SPSCQueue
+from repro.core import EOS, GO_ON, ShmCounters, ShmFlag, ShmRing, SPSCQueue
 from repro.core.spsc import _EOS
 
 _EMPTY = SPSCQueue._EMPTY
@@ -124,6 +129,274 @@ def test_unconsumed_spills_swept_on_unlink():
     assert glob.glob(pattern)
     r.unlink()
     assert not glob.glob(pattern)
+
+
+# -- typed zero-copy slots ---------------------------------------------------
+def test_zero_copy_ndarray_roundtrips_dtype_and_shape():
+    np = pytest.importorskip("numpy")
+    r = ShmRing(8, slot_size=20_000)
+    try:
+        arrays = [np.arange(12, dtype=np.float32).reshape(4, 3),
+                  np.arange(7, dtype=np.int64),
+                  np.ones((2, 3, 4), dtype=np.float64) * 0.5,
+                  np.zeros(4096, dtype=np.float32)]  # 16 KiB payload
+        for a in arrays:
+            assert r.push(a)
+        # typed frames never touch the spill side-channel
+        assert not glob.glob(
+            os.path.join(r.spill_dir, f"ffshm-{r.name.lstrip('/')}-*"))
+        for a in arrays:
+            out = r.pop()
+            assert out.dtype == a.dtype and out.shape == a.shape
+            assert np.array_equal(out, a)
+            out[...] = 0  # the copy is writable and owned, not a view
+    finally:
+        r.unlink()
+
+
+def test_zero_copy_raw_bytes_kinds(ring):
+    payloads = [b"hello", bytearray(b"world"), memoryview(b"view-me")]
+    for p in payloads:
+        assert ring.push(p)
+    assert ring.pop() == b"hello"
+    out = ring.pop()
+    assert isinstance(out, bytearray) and out == bytearray(b"world")
+    assert ring.pop() == b"view-me"  # memoryview decodes as bytes
+
+
+def test_zero_copy_pickle_fallback_for_arbitrary_objects():
+    np = pytest.importorskip("numpy")
+    r = ShmRing(8, slot_size=4096)
+    try:
+        items = [{"k": [1, 2]},                          # plain object
+                  np.asfortranarray(np.ones((3, 3))),     # non-C-contiguous
+                  np.zeros(2, dtype=[("a", "i4")]),       # structured dtype
+                  np.float32(1.5),                        # 0-d scalar
+                  None]
+        for it in items:
+            assert r.push(it)
+        got = [r.pop() for _ in items]
+        assert got[0] == items[0]
+        assert np.array_equal(got[1], items[1])
+        assert np.array_equal(got[2], items[2])
+        assert got[3] == items[3] and got[4] is None
+    finally:
+        r.unlink()
+
+
+def test_zero_copy_opt_out_still_roundtrips():
+    np = pytest.importorskip("numpy")
+    r = ShmRing(8, slot_size=20_000, zero_copy=False)
+    try:
+        a = np.arange(16, dtype=np.float32)
+        assert r.push(a)
+        assert np.array_equal(r.pop(), a)
+        peer = pickle.loads(pickle.dumps(r))
+        assert peer.zero_copy is False  # the flag survives attach
+        peer.close()
+    finally:
+        r.unlink()
+
+
+# -- batched emit: push_many packs, pop unpacks in order ---------------------
+def test_push_many_fifo_and_pending_accounting(ring):
+    items = list(range(40))
+    got = []
+    i = 0
+    while i < len(items):
+        n = ring.push_many(items[i:])
+        i += n
+        if n == 0:  # ring full of batch frames: drain one, keep packing
+            got.append(ring.pop())
+    while not ring.empty():
+        got.append(ring.pop())
+    assert got == items
+    assert ring.pop() is _EMPTY
+
+
+def test_push_many_preserves_eos_ordering(ring):
+    stream = [1, 2, 3, EOS]
+    i = 0
+    while i < len(stream):  # EOS may start a fresh slot: keep packing
+        i += ring.push_many(stream[i:])
+    assert [ring.pop() for _ in range(3)] == [1, 2, 3]
+    assert ring.pop() is EOS
+    assert ring.empty()
+
+
+def test_push_many_oversized_first_item_falls_back_to_push():
+    r = ShmRing(8, slot_size=32, spill_dir=None)
+    try:
+        big = "x" * 1000  # cannot fit a batch frame: spills via push()
+        assert r.push_many([big, 1, 2]) == 1
+        assert r.pop() == big
+    finally:
+        r.unlink()
+
+
+def test_len_counts_consumer_pending_batch(ring):
+    assert ring.push_many([10, 11, 12]) == 3
+    assert ring.pop() == 10       # decodes the batch, parks 11/12 pending
+    assert len(ring) == 2 and not ring.empty()
+    assert ring.pop() == 11 and ring.pop() == 12
+    assert ring.empty()
+
+
+# -- spill regressions: decode failure + spill-dir pinning -------------------
+def test_spill_decode_failure_leaves_file_and_ring_recovers(tmp_path):
+    r = ShmRing(8, slot_size=64, spill_dir=str(tmp_path))
+    try:
+        r.push("a" * 500)   # spills
+        r.push("next")       # inline behind it
+        [path] = glob.glob(str(tmp_path / f"ffshm-{r.name.lstrip('/')}-*"))
+        good = open(path, "rb").read()
+        with open(path, "wb") as fh:
+            fh.write(b"\x80garbage")  # corrupt the spill payload
+        with pytest.raises(Exception):
+            r.pop()
+        # the file survives the failed decode (unlink happens only after a
+        # successful loads), so the item is recoverable...
+        assert os.path.exists(path)
+        with open(path, "wb") as fh:
+            fh.write(good)
+        assert r.pop() == "a" * 500      # ...and head was never published
+        assert not os.path.exists(path)  # consumed spill deleted eagerly
+        assert r.pop() == "next"         # the stream continues undamaged
+    finally:
+        r.unlink()
+
+
+def test_spill_dir_pinned_at_creation(tmp_path, monkeypatch):
+    made = tmp_path / "made-here"
+    made.mkdir()
+    r = ShmRing(8, slot_size=16, spill_dir=str(made))
+    try:
+        r.push("b" * 500)
+        assert glob.glob(str(made / f"ffshm-{r.name.lstrip('/')}-*"))
+        # the consumer's TMPDIR diverges after creation: the attached copy
+        # must still resolve spills against the ring's pinned directory
+        monkeypatch.setattr(tempfile, "tempdir", str(tmp_path / "elsewhere"))
+        peer = pickle.loads(pickle.dumps(r))
+        assert peer.spill_dir == str(made)
+        assert peer.pop() == "b" * 500
+        peer.close()
+    finally:
+        r.unlink()
+
+
+def test_spill_dir_survives_cross_process_tmpdir_divergence(
+        tmp_path, monkeypatch):
+    import multiprocessing as mp
+    from _procs_nodes import echo_child
+    a, b = ShmRing(8, slot_size=16), ShmRing(8, slot_size=4096)
+    # the child spawns with a different TMPDIR; before spill-dir pinning it
+    # would look for the parent's spill files in the wrong directory
+    child_tmp = tmp_path / "child-tmp"
+    child_tmp.mkdir()
+    monkeypatch.setenv("TMPDIR", str(child_tmp))
+    ctx = mp.get_context("spawn")
+    p = ctx.Process(target=echo_child, args=(a, b), daemon=True)
+    p.start()
+    try:
+        assert a.push_wait("c" * 500, timeout=30)  # spills in parent's dir
+        assert a.push_wait(EOS, timeout=30)
+        assert b.pop_wait(timeout=30) == "c" * 500
+        assert b.pop_wait(timeout=30) == ("eos-is-eos", True)
+        p.join(30)
+        assert p.exitcode == 0
+    finally:
+        if p.is_alive():
+            p.terminate()
+        a.unlink()
+        b.unlink()
+
+
+def test_numpy_zero_copy_through_spawned_consumer():
+    np = pytest.importorskip("numpy")
+    import multiprocessing as mp
+    from _procs_nodes import np_sum_child
+    a, b = ShmRing(32, 20_000), ShmRing(32, 256)
+    ctx = mp.get_context("spawn")
+    p = ctx.Process(target=np_sum_child, args=(a, b), daemon=True)
+    p.start()
+    try:
+        arrays = [np.arange(n, dtype=np.float32) for n in (3, 100, 4096)]
+        for arr in arrays:
+            assert a.push_wait(arr, timeout=30)
+        assert a.push_wait(EOS, timeout=30)
+        for arr in arrays:
+            dt, shape, total = b.pop_wait(timeout=30)
+            assert dt == arr.dtype.str and shape == arr.shape
+            assert total == float(arr.sum())
+        p.join(30)
+        assert p.exitcode == 0
+    finally:
+        if p.is_alive():
+            p.terminate()
+        a.unlink()
+        b.unlink()
+
+
+# -- blocking helpers honour their deadline ----------------------------------
+def test_push_wait_pop_wait_return_within_timeout():
+    r = ShmRing(4, 64)
+    try:
+        while r.push(0):
+            pass  # fill the ring
+        t0 = time.monotonic()
+        assert not r.push_wait(99, timeout=0.2)
+        elapsed = time.monotonic() - t0
+        assert 0.15 <= elapsed < 1.0, elapsed
+        while r.pop() is not _EMPTY:
+            pass
+        t0 = time.monotonic()
+        assert r.pop_wait(timeout=0.2) is _EMPTY
+        elapsed = time.monotonic() - t0
+        assert 0.15 <= elapsed < 1.0, elapsed
+    finally:
+        r.unlink()
+
+
+# -- ShmFlag: the pickle-through-able failure flag ---------------------------
+def test_shmflag_set_is_sticky_and_visible_through_attach():
+    fl = ShmFlag()
+    try:
+        assert not fl.is_set()
+        peer = pickle.loads(pickle.dumps(fl))
+        assert not peer.is_set()
+        peer.set()
+        peer.set()  # idempotent
+        assert fl.is_set()
+        peer.close()
+    finally:
+        fl.unlink()
+
+
+def test_shmflag_cross_process_set():
+    import multiprocessing as mp
+    from _procs_nodes import set_flag_child
+    fl = ShmFlag()
+    try:
+        ctx = mp.get_context("spawn")
+        p = ctx.Process(target=set_flag_child, args=(fl,), daemon=True)
+        p.start()
+        p.join(30)
+        assert p.exitcode == 0 and fl.is_set()
+    finally:
+        fl.unlink()
+
+
+def test_counters_explicit_name_is_honoured():
+    name = f"ffctr{uuid.uuid4().hex[:12]}"
+    board = ShmCounters(2, name=name)
+    try:
+        assert board.name == name  # regression: create path ignored name=
+        board.add(0, 7)
+        peer = pickle.loads(pickle.dumps(board))
+        assert peer.get(0) == 7
+        peer.close()
+    finally:
+        board.unlink()
 
 
 # -- EOS identity across pickling and process boundaries (satellite) ---------

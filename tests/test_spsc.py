@@ -78,3 +78,41 @@ def test_two_thread_stream(qcls):
     t1.start(); t2.start(); t1.join(10); t2.join(10)
     assert out == list(range(n))
     assert q.pushes == n + 1 and q.pops == n + 1
+
+
+# -- the shared backoff helper: deadline before sleep, truncated sleeps ------
+def test_backoff_deadline_checked_before_sleeping():
+    from repro.core.spsc import Backoff
+    b = Backoff()
+    for _ in range(Backoff.SPINS):
+        assert b.pause(deadline=None) or True  # burn the spin phase
+    import time
+    t0 = time.monotonic()
+    assert not b.pause(deadline=t0 - 1.0)  # expired: no sleep, just False
+    assert time.monotonic() - t0 < 0.05
+
+
+def test_backoff_sleeps_are_truncated_to_the_deadline():
+    from repro.core.spsc import Backoff
+    import time
+    b = Backoff()
+    deadline = time.monotonic() + 0.05
+    while b.pause(deadline):
+        pass
+    # the last sleep is min(delay, remaining): total overshoot stays tiny
+    assert time.monotonic() - deadline < 0.1
+
+
+def test_push_wait_pop_wait_return_within_timeout():
+    import time
+    q = SPSCQueue(4)
+    while q.push(0):
+        pass
+    t0 = time.monotonic()
+    assert not q.push_wait(99, timeout=0.2)
+    assert 0.15 <= time.monotonic() - t0 < 1.0
+    while q.pop() is not SPSCQueue._EMPTY:
+        pass
+    t0 = time.monotonic()
+    assert q.pop_wait(timeout=0.2) is SPSCQueue._EMPTY
+    assert 0.15 <= time.monotonic() - t0 < 1.0
