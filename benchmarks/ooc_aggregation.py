@@ -1,0 +1,197 @@
+"""Out-of-core keyed aggregation: wall time + peak RSS per scale tier.
+
+The parquet-aggregator fight (ROADMAP): a single-process in-memory
+keyed fold vs the streaming parallel aggregation — FastFlow's claim is
+that with cheap enough hand-offs the parallel pipeline wins on *time*,
+and the out-of-core layer (``repro.core.oocore``) makes it win on
+*memory* too.  Per scale tier this module records both sides:
+
+``ooc_<tier>_inmem``
+    the baseline: the library's own single-process aggregation — the
+    pre-oocore ``reduce_by_key`` path (unbounded in-memory ``_KeyFold``
+    partitions on the threads backend), every row crossing the shuffle
+    individually.  This is what a user of this library ran before
+    ``oocore`` existed, so it is the comparison the subsystem claims to
+    improve — not a hand-tuned raw loop (which pays no streaming
+    hand-offs and answers a different question);
+``ooc_<tier>_ooc``
+    ``shard_reduce``: sharded combining readers → keyed shuffle in
+    ``KeyBatch`` messages → budgeted ``SpillFold`` partitions, on the
+    procs backend (``pool=False`` so vertex processes exit and their
+    RSS is visible to ``RUSAGE_CHILDREN``).
+
+Every measured configuration runs in its OWN subprocess: ``ru_maxrss``
+is a process-lifetime high-water mark, so sharing one interpreter
+across configs (or with other benchmark modules) would contaminate
+every later reading with the largest earlier one.  The child prints one
+JSON line; the parent emits ``us_per_row`` with the memory axis in the
+derived column — the first peak-RSS numbers in ``BENCH_results.json``.
+
+The dataset is synthetic but shaped like the real workload: a skewed
+(≈80/20) key distribution over a large key space, with a per-row decode
+cost (crc of a formatted id) both sides pay identically.  Deterministic
+from the row index alone — every shard process regenerates its own row
+ranges, no input file.
+
+Tier knobs (set attributes before calling :func:`run`, or
+``REPRO_OOC_TIERS=small,large``): ``TIERS`` picks the tiers, ``CFG``
+holds per-tier row counts/key space/budget.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import zlib
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# per-tier config: rows, hot/cold key-space split, per-partition byte
+# budget, and the network shape.  combine_limit is the map-side
+# combiner's byte bound (per reader) — hot keys stay resident in it
+# (recency order), so shuffle volume collapses to roughly the cold tail.
+CFG = {
+    "small": dict(nrows=20_000, hot=256, cold=20_000, budget=256 << 10,
+                  combine_limit=512 << 10, nleft=2, nright=2,
+                  batch_rows=4096),
+    "medium": dict(nrows=200_000, hot=1024, cold=200_000, budget=512 << 10,
+                   combine_limit=1 << 20, nleft=2, nright=2,
+                   batch_rows=8192),
+    "large": dict(nrows=1_000_000, hot=1024, cold=1_000_000, budget=1 << 20,
+                  combine_limit=2 << 20, nleft=2, nright=2,
+                  batch_rows=8192),
+}
+TIERS = tuple(t.strip() for t in os.environ.get(
+    "REPRO_OOC_TIERS", "small").split(",") if t.strip())
+TIMEOUT = 600.0
+
+
+class SynthRows:
+    """Deterministic skewed row source: ``reader(lo, hi)`` -> list of
+    ``(key, value)`` rows.  ~80% of rows hit ``hot`` keys, ~20% spray
+    over a ``cold`` key space; the value derives from a crc over the
+    formatted row id — the per-row decode cost a real columnar scan
+    pays, identical for both measured paths."""
+
+    def __init__(self, nrows: int, hot: int, cold: int):
+        self.nrows = nrows
+        self.hot = hot
+        self.cold = cold
+
+    def __call__(self, lo: int, hi: int):
+        crc = zlib.crc32
+        hot, cold = self.hot, self.cold
+        rows = []
+        for i in range(lo, hi):
+            h = (i * 2654435761) & 0xFFFFFFFF
+            k = h % hot if h % 5 else hot + (h // 5) % cold
+            rows.append((k, float(crc(b"row-%d" % i) & 0xFFFF)))
+        return rows
+
+
+def row_key(row):
+    return row[0]
+
+
+def row_stats(acc, row):
+    """Seeded fold: (count, total) per key."""
+    return (acc[0] + 1, acc[1] + row[1])
+
+
+def merge_stats(a, b):
+    return (a[0] + b[0], a[1] + b[1])
+
+
+def _run_inmem(cfg: dict) -> dict:
+    """Baseline: the pre-oocore library path — ``reduce_by_key`` with
+    unbounded in-memory ``_KeyFold`` partitions, single process (threads
+    backend), every row a streamed hand-off."""
+    from repro.core import lower, reduce_by_key
+    from repro.core.oocore import _entry_nbytes
+
+    reader = SynthRows(cfg["nrows"], cfg["hot"], cfg["cold"])
+    step = cfg["batch_rows"]
+
+    def rows():
+        for lo in range(0, cfg["nrows"], step):
+            yield from reader(lo, min(lo + step, cfg["nrows"]))
+
+    prog = lower(reduce_by_key(row_key, row_stats, init=(0, 0.0),
+                               nleft=cfg["nleft"], nright=cfg["nright"]),
+                 "threads")
+    out = prog(rows())
+    state = sum(_entry_nbytes(k, v) for k, v in out)
+    return {"distinct_keys": len(out), "est_state_bytes": state,
+            "spills": 0, "spill_bytes": 0, "stalls": 0}
+
+
+def _run_ooc(cfg: dict) -> dict:
+    """shard_reduce on the procs backend, budgeted right row."""
+    from repro.core import lower, shard_reduce
+
+    reader = SynthRows(cfg["nrows"], cfg["hot"], cfg["cold"])
+    skel = shard_reduce(reader, row_key, row_stats, init=(0, 0.0),
+                        combine=merge_stats, nleft=cfg["nleft"],
+                        nright=cfg["nright"], budget=cfg["budget"],
+                        batch_rows=cfg["batch_rows"],
+                        combine_limit=cfg["combine_limit"])
+    prog = lower(skel, "procs", pool=False)  # children must exit: their
+    g = prog.to_graph(None)                  # RSS reads via RUSAGE_CHILDREN
+    g.run()
+    out = g.wait(TIMEOUT)
+    return {"distinct_keys": len(out),
+            "est_state_bytes": cfg["budget"] * cfg["nright"],
+            "spills": skel.stats.spills,
+            "spill_bytes": skel.stats.spill_bytes,
+            "stalls": skel.stats.backpressure_stalls}
+
+
+def child_main(mode: str, cfg_json: str) -> None:
+    """One measured configuration, alone in this interpreter (ru_maxrss
+    is a lifetime high-water mark).  Prints one JSON result line."""
+    import resource
+    import time
+
+    cfg = json.loads(cfg_json)
+    t0 = time.perf_counter()
+    extra = _run_inmem(cfg) if mode == "inmem" else _run_ooc(cfg)
+    wall = time.perf_counter() - t0
+    self_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    child_kb = resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss
+    print(json.dumps(dict(extra, wall_s=wall, maxrss_kb=max(self_kb, child_kb),
+                          self_kb=self_kb, child_kb=child_kb)), flush=True)
+
+
+def _measure(mode: str, cfg: dict) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), _ROOT] +
+        ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    code = (f"import benchmarks.ooc_aggregation as m; "
+            f"m.child_main({mode!r}, {json.dumps(cfg)!r})")
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=_ROOT,
+                         capture_output=True, text=True, timeout=TIMEOUT)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"ooc_aggregation child ({mode}) failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(emit) -> None:
+    ncpu = os.cpu_count() or 1
+    for tier in TIERS:
+        cfg = CFG[tier]
+        for mode in ("inmem", "ooc"):
+            r = _measure(mode, cfg)
+            emit(f"ooc_{tier}_{mode}", r["wall_s"] * 1e6 / cfg["nrows"],
+                 f"maxrss_kb={r['maxrss_kb']} wall_s={r['wall_s']:.3f} "
+                 f"nrows={cfg['nrows']} distinct_keys={r['distinct_keys']} "
+                 f"budget_bytes={cfg['budget']}x{cfg['nright']} "
+                 f"est_state_bytes={r['est_state_bytes']} "
+                 f"spills={r['spills']} spill_bytes={r['spill_bytes']} "
+                 f"stalls={r['stalls']} ncpu={ncpu}")
+
+
+if __name__ == "__main__":
+    run(lambda name, us, derived="": print(f"{name},{us:.3f},{derived}"))

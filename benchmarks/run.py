@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement):
                         GIL-escape curve of the procs backend)
   a2a_shuffle.py      — all-to-all hand-off cost vs nleft×nright matrix
                         shape, threads vs procs
+  ooc_aggregation.py  — out-of-core keyed aggregation: wall time + peak RSS
+                        per scale tier, budgeted spill path vs the
+                        single-process in-memory baseline
   smith_waterman.py   — Fig. 7 + Table 1: SW database search GCUPS
   roofline.py         — EXPERIMENTS §Roofline terms from the dry-run artifacts
 
@@ -45,8 +48,8 @@ import time
 from typing import List, Optional, Tuple
 
 MODULES = ("queues", "farm_overhead", "farm_composition", "skeleton_parity",
-           "sched_policies", "proc_farm", "a2a_shuffle", "smith_waterman",
-           "roofline")
+           "sched_policies", "proc_farm", "a2a_shuffle", "ooc_aggregation",
+           "smith_waterman", "roofline")
 
 
 def _emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -68,6 +71,11 @@ def main(argv: Optional[List[str]] = None) -> None:
     unknown = sorted(set(names) - set(MODULES))
     if unknown:
         ap.error(f"unknown benchmark modules {unknown} (have {list(MODULES)})")
+    if not names:
+        # "--only , " would otherwise run nothing and exit 0 — a CI
+        # invocation typo silently uploading an empty BENCH_results.json
+        ap.error(f"--only selected no benchmark modules "
+                 f"(have {list(MODULES)})")
 
     rows: List[Tuple[str, str, float, str]] = []
     print("name,us_per_call,derived")

@@ -5,8 +5,9 @@
      graph over shared-memory rings, and a single shard_map mesh program
      (no host hop between stages); plus the threads backend's pluggable
      scheduling policies (Farm(scheduling=...)), the grain-aware
-     fusion pass (lower(..., fuse=...)), and the all-to-all keyed
-     shuffle (reduce_by_key — §1d);
+     fusion pass (lower(..., fuse=...)), the all-to-all keyed
+     shuffle (reduce_by_key — §1d), and its out-of-core form
+     (budget= spill-to-disk folds — §1f);
   2. the paper's application: Smith-Waterman database search through an
      ordered farm;
   3. the LM framework: one reduced-config train step + one decode step.
@@ -124,6 +125,23 @@ def main():
                slot_size=8192, zero_copy=True, batch=4)(arrs)
     assert all(np.array_equal(o, a * 2.0) for o, a in zip(zc, arrs))
     print("zero-copy procs pool:", pool_stats())
+
+    # -- 1f. bounded-memory aggregation (the out-of-core layer) --------------
+    # budget= bounds each partition's hot fold state in BYTES: when a
+    # partition's dict outgrows it, the coldest keys spill to a sorted
+    # on-disk run and the EOS flush merges runs back — identical results,
+    # bounded memory, telemetry on skel.stats.  The scatter also gains
+    # byte-driven backpressure (stalls intake while the aggregate hot
+    # state sits over the budget's high-water mark).  For datasets too
+    # big to materialise at all, shard_reduce() composes sharded
+    # combining readers with spill-backed partitions — see
+    # examples/parquet_aggregation.py for the full walkthrough.
+    budgeted = reduce_by_key(_mod4, "sum", nleft=2, nright=2, budget=100)
+    by_budget = dict(lower(budgeted, "threads")(range(32)))
+    assert by_budget == by_threads
+    print(f"budgeted reduce_by_key: same result, spills="
+          f"{budgeted.stats.spills} spill_bytes={budgeted.stats.spill_bytes}")
+    assert budgeted.stats.spills > 0  # the 100-byte budget forced runs
 
     # -- 2. the paper's app: SW database search (host-only payloads) ---------
     rng = np.random.default_rng(0)

@@ -14,11 +14,11 @@
 from .spsc import EOS, SPSCQueue
 from .lockq import LockQueue
 from .shm import ShmCounters, ShmFlag, ShmRing
-from .sched import (SCHEDULERS, CostModel, KeyAffinity, OnDemand, RoundRobin,
-                    Scheduler, WorkStealing, calibrate_handoff_us,
-                    make_scheduler, spread_cpus)
+from .sched import (SCHEDULERS, BudgetBackpressure, CostModel, KeyAffinity,
+                    OnDemand, RoundRobin, Scheduler, WorkStealing,
+                    calibrate_handoff_us, make_scheduler, spread_cpus)
 from .skeleton import (GO_ON, AllToAll, EmitMany, Farm, FarmStats, Feedback,
-                       FnNode, FusedNode,
+                       FnNode, FusedNode, KeyBatch,
                        LatencyReservoir, LoweringError, MeshProgram, Pipeline,
                        Skeleton, Source, Stage, ThreadProgram, as_skeleton,
                        compose, ff_node, fuse, lower)
@@ -28,6 +28,8 @@ from .procgraph import (ProcAccelerator, ProcGraph, ProcProgram,
 from .a2a import A2AMeshProgram, stable_hash
 from .stream_ops import (FOLDS, Fold, KeyedReduce, partition_by,
                          reduce_by_key, window)
+from .oocore import (CombiningReader, MemoryBudget, ShardReader, SpillFold,
+                     rekey_reduce, shard_reduce, shard_source)
 from .farm import TaskFarm
 from .allocator import PagePool, PoolExhausted
 from .mdf import MDFExecutor, MDFTask
@@ -44,7 +46,8 @@ _LAZY = {
 
 __all__ = [
     "EOS", "SPSCQueue", "LockQueue", "ShmRing", "ShmCounters", "ShmFlag",
-    "GO_ON", "EmitMany", "Accelerator", "Farm", "Feedback", "Graph", "Net",
+    "GO_ON", "EmitMany", "KeyBatch", "Accelerator", "Farm", "Feedback",
+    "Graph", "Net",
     "Pipeline", "AllToAll",
     "Skeleton", "Source", "Stage", "Token", "compose",
     "LoweringError", "MeshProgram", "ThreadProgram", "as_skeleton", "build",
@@ -54,8 +57,11 @@ __all__ = [
     "A2AMeshProgram", "stable_hash",
     "FOLDS", "Fold", "KeyedReduce", "partition_by", "reduce_by_key",
     "window",
+    "MemoryBudget", "SpillFold", "ShardReader", "CombiningReader",
+    "shard_source", "shard_reduce", "rekey_reduce",
     "SCHEDULERS", "Scheduler", "RoundRobin", "OnDemand", "WorkStealing",
-    "CostModel", "KeyAffinity", "make_scheduler", "calibrate_handoff_us",
+    "CostModel", "KeyAffinity", "BudgetBackpressure", "make_scheduler",
+    "calibrate_handoff_us",
     "FarmStats", "LatencyReservoir", "FnNode", "TaskFarm", "ff_node",
     "PagePool", "PoolExhausted",
     "MDFExecutor", "MDFTask",

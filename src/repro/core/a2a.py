@@ -44,9 +44,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from . import graph as _graph
 from . import procgraph as _procgraph
-from .skeleton import (GO_ON, AllToAll, EmitMany, FnNode, LoweringError,
-                       Pipeline, Skeleton, Stage, WORKER_AXIS, _ReorderNode,
-                       _jax_callable, ff_node)
+from .skeleton import (GO_ON, AllToAll, EmitMany, FnNode, KeyBatch,
+                       LoweringError, Pipeline, Skeleton, Stage, WORKER_AXIS,
+                       _ReorderNode, _jax_callable, ff_node)
 
 __all__ = [
     "stable_hash", "KeyRouter", "build_thread_a2a", "build_proc_a2a",
@@ -131,6 +131,22 @@ class KeyRouter:
             return w
         return stable_hash(self.by(x)) % self.nright
 
+    def split(self, batch: KeyBatch) -> List[Tuple[int, KeyBatch]]:
+        """Partition a :class:`~repro.core.skeleton.KeyBatch` by
+        destination: one sub-batch per right vertex that owns any of its
+        keys — the whole batch then costs one ring message per *destination*
+        instead of one per item."""
+        if self.nright == 1:
+            return [(0, batch)] if batch else []
+        buckets: List[Optional[KeyBatch]] = [None] * self.nright
+        for x in batch:
+            w = self(x)
+            b = buckets[w]
+            if b is None:
+                buckets[w] = b = KeyBatch()
+            b.append(x)
+        return [(w, b) for w, b in enumerate(buckets) if b]
+
 
 # ---------------------------------------------------------------------------
 # tag plumbing for ordered= (the existing tagged-token machinery, N×M shape)
@@ -183,6 +199,23 @@ class _TagCarry(ff_node):
         return None
 
 
+def _a2a_budgets(skel: AllToAll) -> List[Any]:
+    """The distinct memory-budget boards carried by the right row.
+
+    Duck-typed (a budget exposes ``fold_into``, and ``share``/``collect``/
+    ``n_slots`` for the procs board swap — :class:`repro.core.oocore.
+    MemoryBudget` is the implementation), so the builders stay free of an
+    oocore import; identity-deduped because one reduction's partitions
+    share one budget."""
+    out: List[Any] = []
+    for n in skel.right_nodes:
+        b = getattr(n, "budget", None)
+        if b is not None and hasattr(b, "fold_into") \
+                and not any(b is x for x in out):
+            out.append(b)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # threads lowering: N×M matrix of SPSC rings, one thread per vertex
 # ---------------------------------------------------------------------------
@@ -197,6 +230,14 @@ class A2ALeftVertex(_graph.StageVertex):
         self.router = router
 
     def _emit(self, out: Any) -> None:
+        if type(out) is KeyBatch:
+            if not self.outs:
+                self.graph.results.extend(out)
+                return
+            for w, sub in self.router.split(out):  # one message per dest
+                if not self._push_abortable(self.outs[w], sub):
+                    raise _graph._Aborted()
+            return
         if isinstance(out, EmitMany):
             for o in out:
                 self._emit(o)
@@ -232,6 +273,10 @@ def build_thread_a2a(skel: AllToAll, g: "_graph.Graph", in_rings: List[Any],
     qc = skel.queue_class or g.queue_class
     cap = skel.capacity or g.capacity
     lnodes, rnodes = _wrap_rows(skel)
+    for b in _a2a_budgets(skel):
+        # same process: the partitions already write the budget's local
+        # counters — just surface the totals once the run has joined
+        g.finalizers.append(lambda b=b: b.fold_into(skel.stats))
 
     if in_rings:
         scatter = g.add(_graph.StageVertex(
@@ -318,6 +363,11 @@ class A2AProcLeftVertex(_procgraph.ProcStageVertex):
         self.router = router
 
     def _emit(self, out: Any) -> None:
+        if type(out) is KeyBatch:
+            for w, sub in self.router.split(out):  # one message per dest
+                if not self._push_abortable(self.outs[w], sub):
+                    raise _procgraph._Aborted()
+            return
         if isinstance(out, EmitMany):
             for o in out:
                 self._emit(o)
@@ -334,6 +384,17 @@ def build_proc_a2a(skel: AllToAll, g: "_procgraph.ProcGraph",
     caller drains them all and counts EOS per ring)."""
     cap = skel.capacity or g.capacity
     lnodes, rnodes = _wrap_rows(skel)
+    for b in _a2a_budgets(skel):
+        if hasattr(b, "share") and hasattr(b, "n_slots"):
+            # swap in a shared counter board NOW, before run() pickles the
+            # vertices: every partition process attaches the same segment
+            # (ShmCounters travels by name) and writes only its own slots
+            b.share(g.counters(b.n_slots))
+
+            def _collect_budget(b=b, stats=skel.stats):
+                b.collect()      # copy the board out before it is unlinked
+                b.fold_into(stats)
+            g.finalizers.append(_collect_budget)
 
     if in_rings:
         scatter = g.add(A2AProcScatterVertex(

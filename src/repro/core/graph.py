@@ -71,7 +71,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
 
 from .sched import Scheduler, make_scheduler
 from .skeleton import (GO_ON, AllToAll, EmitMany, Farm, FarmStats, Feedback,
-                       FnNode, Pipeline, Skeleton, Source, Stage,
+                       FnNode, KeyBatch, Pipeline, Skeleton, Source, Stage,
                        _FarmEmitMany, _SeqNode, as_skeleton, compose, ff_node)
 from .spsc import EOS, SPSCQueue
 
@@ -133,6 +133,9 @@ class Vertex:
     def __init__(self, node: Optional[ff_node] = None, *, name: str = "ff-vertex"):
         self.node = node
         self.name = name
+        # batch-aware nodes (SpillFold) take a whole KeyBatch in one svc
+        # call; everyone else gets it unpacked by the vertex loop
+        self._takes_batches = bool(getattr(node, "accepts_batches", False))
         self.ins: List[Any] = []
         self.outs: List[Any] = []
         self.graph: Optional["Graph"] = None
@@ -251,6 +254,15 @@ class StageVertex(Vertex):
                 if item is EOS:
                     eos.add(i)
                     continue
+                if type(item) is KeyBatch and not self._takes_batches:
+                    # batched wire format: unpack here so the node still
+                    # sees items (batching is transport, not semantics)
+                    for x in item:
+                        out = self.node.svc(x)
+                        if out is None or out is GO_ON:
+                            continue
+                        self._emit(out)
+                    continue
                 out = self.node.svc(item)
                 if out is None or out is GO_ON:
                     continue  # filtered
@@ -269,7 +281,13 @@ class StageVertex(Vertex):
             self._emit(out)
 
     def _emit(self, out: Any) -> None:
-        if isinstance(out, EmitMany):  # multi-emit (e.g. a reorder flush)
+        if type(out) is KeyBatch:  # one wire message; consumers unpack
+            if not out:
+                return
+            if not self.outs:
+                self.graph.results.extend(out)  # the caller sees items
+                return
+        elif isinstance(out, EmitMany):  # multi-emit (e.g. a reorder flush)
             for o in out:
                 self._emit(o)
             return
@@ -699,6 +717,9 @@ class Graph:
         self.results: List[Any] = []
         self.failed: List[BaseException] = []
         self._threads: List[threading.Thread] = []
+        # post-run hooks (builders register them): fold telemetry boards
+        # back into the IR node's stats once the vertices have joined
+        self.finalizers: List[Callable[[], None]] = []
 
     def channel(self, capacity: Optional[int] = None,
                 queue_class: Optional[Type] = None) -> Any:
@@ -730,6 +751,8 @@ class Graph:
     def wait(self, timeout: Optional[float] = None) -> List[Any]:
         for t in self._threads:
             t.join(timeout)
+        while self.finalizers:
+            self.finalizers.pop()()  # run once, even if wait() is re-entered
         if self.failed:
             raise self.failed[0]
         return self.results

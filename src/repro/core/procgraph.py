@@ -78,9 +78,9 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 from .sched import Scheduler, make_scheduler
 from .shm import ShmCounters, ShmFlag, ShmRing
 from .skeleton import (BACKENDS, GO_ON, AllToAll, EmitMany, Farm, FarmStats,
-                       Feedback, LoweringError, Pipeline, Skeleton, Source,
-                       Stage, _FarmEmitMany, _has_grained_stage, as_skeleton,
-                       ff_node, fuse as _fuse_pass)
+                       Feedback, KeyBatch, LoweringError, Pipeline, Skeleton,
+                       Source, Stage, _FarmEmitMany, _has_grained_stage,
+                       as_skeleton, ff_node, fuse as _fuse_pass)
 from .spsc import EOS, SPSCQueue
 
 __all__ = [
@@ -345,6 +345,9 @@ class ProcVertex:
                  name: str = "ff-pvertex"):
         self.node = node
         self.name = name
+        # batch-aware nodes (SpillFold) take a whole KeyBatch in one svc
+        # call; everyone else gets it unpacked by the vertex loop
+        self._takes_batches = bool(getattr(node, "accepts_batches", False))
         self.ins: List[ShmRing] = []
         self.outs: List[ShmRing] = []
         self.failed: Any = None   # ShmFlag, set by ProcGraph.add
@@ -490,6 +493,15 @@ class ProcStageVertex(ProcVertex):
                     if item is EOS:
                         eos.add(i)
                         break
+                    if type(item) is KeyBatch and not self._takes_batches:
+                        # batched wire format: unpack here so the node
+                        # still sees items (batching is transport only)
+                        for x in item:
+                            out = self.node.svc(x)
+                            if out is None or out is GO_ON:
+                                continue
+                            self._emit(out)
+                        continue
                     out = self.node.svc(item)
                     if out is None or out is GO_ON:
                         continue  # filtered
@@ -515,6 +527,10 @@ class ProcStageVertex(ProcVertex):
             self._emit(out)
 
     def _emit(self, out: Any) -> None:
+        if type(out) is KeyBatch:  # one wire message; consumers unpack
+            if out:
+                self._deliver(out)
+            return
         if isinstance(out, EmitMany):  # multi-emit (e.g. a reorder flush)
             for o in out:
                 self._emit(o)
@@ -910,6 +926,9 @@ def _fold_stats(dst: FarmStats, src: FarmStats) -> None:
     dst.duplicates_issued += src.duplicates_issued
     dst.duplicates_dropped += src.duplicates_dropped
     dst.steals += src.steals
+    dst.spills += src.spills
+    dst.spill_bytes += src.spill_bytes
+    dst.backpressure_stalls += src.backpressure_stalls
     for k, v in src.per_worker.items():
         dst.per_worker[k] = dst.per_worker.get(k, 0) + v
     dst.service_ewma.update(src.service_ewma)
@@ -956,6 +975,9 @@ class ProcGraph:
         self._procs: List[Any] = []
         self._pool_workers: List[_PoolWorker] = []
         self._farm_stats: List[Tuple[Farm, ShmRing]] = []
+        # post-run hooks (builders register them): read telemetry boards
+        # back into the IR node's stats BEFORE shared memory is unlinked
+        self.finalizers: List[Callable[[], None]] = []
         self._results_rings: List[ShmRing] = []
         self._eos_rings: set = set()
         self._eos_seen = False
@@ -1086,7 +1108,10 @@ class ProcGraph:
                 if item is EOS:
                     self._eos_rings.add(i)
                     break
-                self.results.append(item)
+                if type(item) is KeyBatch:  # batched wire: caller sees items
+                    self.results.extend(item)
+                else:
+                    self.results.append(item)
         self._eos_seen = len(self._eos_rings) == len(self._results_rings)
         return self._eos_seen
 
@@ -1194,6 +1219,8 @@ class ProcGraph:
             snap = ring.pop()
             if snap is not _EMPTY and isinstance(snap, FarmStats):
                 _fold_stats(farm.stats, snap)
+        while self.finalizers:
+            self.finalizers.pop()()  # runs before _cleanup unlinks boards
 
     def _join_vertices(self, deadline: Optional[float],
                        aborting: bool) -> None:

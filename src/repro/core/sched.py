@@ -53,7 +53,7 @@ from .spsc import SPSCQueue
 
 __all__ = [
     "Scheduler", "RoundRobin", "OnDemand", "WorkStealing", "CostModel",
-    "KeyAffinity",
+    "KeyAffinity", "BudgetBackpressure",
     "SCHEDULERS", "make_scheduler", "calibrate_handoff_us", "spread_cpus",
 ]
 
@@ -367,12 +367,75 @@ class KeyAffinity(Scheduler):
         emit(self.route(payload), tok)
 
 
+class BudgetBackpressure(RoundRobin):
+    """Bounded-memory intake throttle for keyed reductions — the scatter
+    policy a budgeted ``reduce_by_key`` installs by default.
+
+    The policy holds the reduction's :class:`~repro.core.oocore.
+    MemoryBudget`; before each placement it checks whether the hot fold
+    state across all partitions is over the *global* budget
+    (``limit × nparts``) and, if so, counts one backpressure stall and
+    briefly stops taking input (bounded wait, so a wedged reduction can
+    never deadlock the scatter — the partitions relieve pressure by
+    draining their inbound rings, spilling as they fold, which drops
+    their held bytes below the line).  While the scatter stalls, its
+    inbound ring fills and ring-capacity backpressure propagates
+    upstream — the usual FastFlow mechanism, now driven by a byte budget
+    instead of slot counts.
+
+    The wait has hysteresis: partitions spill *on ingest*, so once their
+    rings are drained the held bytes cannot fall further without new
+    input — a stall that times out still over the line would then repeat
+    for every placement while the partitions hover in the over-high-water
+    band (each costing the full bounded wait: a ~1000× slowdown, not
+    backpressure).  After a timed-out stall the policy places freely and
+    re-arms only when the aggregate first dips back below the line, so
+    one stall is paid per spill cycle instead of one per item.
+
+    Works identically on both host backends: on threads the budget's
+    counters are plain shared-object state; on procs the scatter process
+    reads the same :class:`~repro.core.shm.ShmCounters` board the
+    partition processes write (single writer per counter, any reader).
+    Placement itself is round-robin over the left row.  Constructed
+    bare (registry name ``"budget"``) it has no budget and degrades to
+    plain round-robin."""
+
+    name = "budget"
+
+    def __init__(self, budget: Any = None, *,
+                 max_stall_s: float = 0.02) -> None:
+        super().__init__()
+        self.budget = budget
+        self.max_stall_s = max_stall_s
+        self._exhausted = False  # last stall timed out still over the line
+
+    def fresh(self) -> "BudgetBackpressure":
+        # the budget is configuration, not run state: clones keep it (its
+        # counters are cumulative across runs by design)
+        return BudgetBackpressure(self.budget, max_stall_s=self.max_stall_s)
+
+    def pick(self) -> int:
+        b = self.budget
+        if b is not None:
+            over = b.over_total()
+            if not over:
+                self._exhausted = False  # below the line again: re-arm
+            elif not self._exhausted:
+                b.stalled()
+                deadline = time.monotonic() + self.max_stall_s
+                while b.over_total() and time.monotonic() < deadline:
+                    time.sleep(0.0005)
+                self._exhausted = b.over_total()
+        return super().pick()
+
+
 SCHEDULERS: Dict[str, Type[Scheduler]] = {
     "rr": RoundRobin,
     "ondemand": OnDemand,
     "worksteal": WorkStealing,
     "costmodel": CostModel,
     "keyaffinity": KeyAffinity,
+    "budget": BudgetBackpressure,
 }
 
 

@@ -520,6 +520,13 @@ class ShmCounters:
     def get(self, i: int) -> int:
         return self._idx[i * (_CACHE_LINE // 8)]
 
+    def snapshot(self) -> tuple:
+        """All ``n`` values at once (each slot individually racy-fresh —
+        fine for telemetry readouts like ``oocore.MemoryBudget.collect``,
+        which runs after the writers have joined anyway)."""
+        step = _CACHE_LINE // 8
+        return tuple(self._idx[i * step] for i in range(self.n))
+
     def add(self, i: int, delta: int = 1) -> None:
         """Single-writer increment (exactly one process may write slot i)."""
         off = i * (_CACHE_LINE // 8)

@@ -44,7 +44,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
 
 __all__ = [
-    "GO_ON", "EmitMany", "ff_node", "FnNode", "FusedNode",
+    "GO_ON", "EmitMany", "KeyBatch", "ff_node", "FnNode", "FusedNode",
     "FarmStats", "LatencyReservoir",
     "Skeleton", "Stage", "Source", "Pipeline", "Farm", "Feedback",
     "AllToAll",
@@ -136,6 +136,19 @@ class EmitMany(list):
     Only ``StageVertex`` flattens it (the reorder stage's flush is the
     canonical use); farm workers and collectors pass it through as an
     ordinary payload, because their tokens are 1:1 by tag."""
+
+
+class KeyBatch(EmitMany):
+    """A multi-emit that rides the stream as **one message**: the producing
+    vertex pushes the whole batch onto a single ring (one pickle, one slot)
+    and the *consuming* vertex unpacks it — ``svc`` still sees items, so
+    nodes stay batch-oblivious unless they opt in (``accepts_batches =
+    True``, e.g. :class:`~repro.core.oocore.SpillFold`).  The a2a left
+    vertices instead *split* a batch by routing key into one sub-batch per
+    destination ring, which is what lets a keyed shuffle amortize its
+    per-hand-off cost over thousands of pairs (the map-side combiner's
+    eviction chunks).  As an :class:`EmitMany` subclass it degrades to a
+    plain per-item flatten everywhere no batch-aware path exists."""
 
 
 class _FarmEmitMany(EmitMany):
@@ -306,6 +319,12 @@ class FarmStats:
     duplicates_issued: int = 0
     duplicates_dropped: int = 0
     steals: int = 0
+    # out-of-core keyed aggregation (oocore.MemoryBudget folds these in
+    # through the graph finalizer hook): spill runs written, bytes spilled
+    # to disk, and scatter intake stalls from budget backpressure
+    spills: int = 0
+    spill_bytes: int = 0
+    backpressure_stalls: int = 0
     per_worker: Dict[int, int] = field(default_factory=dict)
     # worker i's service-time EWMA, written only by worker i; the
     # CostModel scheduling policy reads it for adaptive placement
@@ -572,6 +591,9 @@ class AllToAll(Skeleton):
         self.name = name
         self.queue_class = queue_class
         self.capacity = capacity
+        # telemetry surface (same convention as Farm.stats): budgeted
+        # reductions fold spill/backpressure counters in after each run
+        self.stats = FarmStats()
 
 
 class _ReorderNode(ff_node):

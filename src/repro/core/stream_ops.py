@@ -57,13 +57,20 @@ class Fold:
 
     ``kind`` names the segment/collective implementation the mesh keyed
     shuffle uses (``segment_sum``+``psum`` etc.); it is a string, not a
-    jax callable, so importing this module never touches jax."""
+    jax callable, so importing this module never touches jax.
+
+    ``combine`` merges two *partial accumulators* of the same key — what
+    spill-to-disk folds and map-side combining (:mod:`repro.core.oocore`)
+    need on top of the per-item step.  Seed-first folds default to the
+    step fn itself (``fn`` is accumulator-closed there); seeded folds
+    like ``count`` step with an item, so they carry an explicit one."""
 
     name: str
     fn: Callable[[Any, Any], Any]
     init: Any = None
     seed_first: bool = True
     kind: Optional[str] = None
+    combine: Optional[Callable[[Any, Any], Any]] = None
 
 
 FOLDS = {
@@ -71,7 +78,7 @@ FOLDS = {
     "min": Fold("min", min, kind="min"),
     "max": Fold("max", max, kind="max"),
     "count": Fold("count", _count_step, init=0, seed_first=False,
-                  kind="count"),
+                  kind="count", combine=operator.add),
 }
 
 
@@ -113,8 +120,19 @@ class _KeyFold(ff_node):
         return GO_ON
 
     def svc_eos(self):
-        out = EmitMany(self._acc.items())
+        items = list(self._acc.items())
         self._acc = {}
+        try:
+            # sorted-key flush: dict insertion order differs per partition
+            # history, so two processes folding the same partition would
+            # emit the same pairs in different orders — sorting makes
+            # threads/procs runs byte-identical (unorderable keys keep
+            # arrival order, and the spill path's _OrdKey total order
+            # covers the exotic cases)
+            items.sort(key=lambda kv: kv[0])
+        except TypeError:
+            pass
+        out = EmitMany(items)
         return out if out else None
 
 
@@ -216,20 +234,49 @@ def reduce_by_key(by: Callable[[Any], Any],
                   fold: Union[str, Fold, Callable] = "sum", *,
                   init: Any = None, nleft: int = 1, nright: int = 2,
                   nkeys: Optional[int] = None, left: Any = None,
-                  scheduling: Any = "rr",
+                  scheduling: Any = "rr", budget: Any = None,
+                  spill_dir: Optional[str] = None,
+                  combine: Optional[Callable[[Any, Any], Any]] = None,
                   name: str = "reduce-by-key") -> AllToAll:
     """Partitioned keyed reduction: shuffle by ``by``, fold each key's
     items on the partition that owns it, flush ``(key, fold)`` pairs at
-    EOS (unordered — compare as a dict).
+    EOS (sorted per partition, unordered across partitions — compare as
+    a dict).
 
     ``fold`` is a registry name (``"sum"``/``"min"``/``"max"``/
     ``"count"``), a :class:`Fold`, or any binary callable (host backends
     only).  Named folds make the node mesh-lowerable when ``nkeys`` bounds
     the key space (``by`` must then be array-polymorphic with integer
     keys in ``[0, nkeys)``).  ``left`` optionally maps items before the
-    shuffle (the columnar-explode stage of an aggregation pipeline)."""
+    shuffle (the columnar-explode stage of an aggregation pipeline).
+
+    ``budget`` bounds the host partitions' fold state: a per-partition
+    byte count or a :class:`~repro.core.oocore.MemoryBudget` — the right
+    row becomes spill-backed :class:`~repro.core.oocore.SpillFold` stores
+    (cold keys go to sorted on-disk runs under ``spill_dir``, merged back
+    at the EOS flush), the default scatter policy upgrades to the
+    budget-aware backpressure policy, and spill/stall telemetry lands in
+    the node's ``.stats``.  The mesh lowering is untouched (it compiles
+    the static ``reduce`` spec and never runs the right row), so one
+    budgeted skeleton still runs on all three backends.  ``combine``
+    merges two partial accumulators of one key — required for spilling
+    with a seeded *custom* fold (named folds carry their own)."""
     fn, init, seed_first, spec = _resolve_fold(fold, init)
-    rights = [_KeyFold(by, fn, init, seed_first) for _ in range(nright)]
+    if budget is not None:
+        # lazy import: oocore composes on top of this module
+        from .oocore import MemoryBudget, SpillFold, resolve_combine
+        from .sched import BudgetBackpressure
+        if not isinstance(budget, MemoryBudget):
+            budget = MemoryBudget(int(budget), nparts=nright)
+        comb = resolve_combine(spec, fn, seed_first, combine)
+        rights: List[Any] = [
+            SpillFold(by, fn, init, seed_first, combine=comb,
+                      budget=budget, part=j, spill_dir=spill_dir)
+            for j in range(nright)]
+        if scheduling == "rr":
+            scheduling = BudgetBackpressure(budget)
+    else:
+        rights = [_KeyFold(by, fn, init, seed_first) for _ in range(nright)]
     reduce_spec = (KeyedReduce(by=by, fold=spec, nkeys=nkeys)
                    if spec is not None and spec.kind else None)
     return AllToAll(left if left is not None else _ident, rights, by=by,

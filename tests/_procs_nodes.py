@@ -94,6 +94,13 @@ def emit_twice(x):
     return EmitMany([x, x])
 
 
+def emit_pair_batch(x):
+    # one KeyBatch per input: a single wire message whose items a plain
+    # downstream stage must still see individually (test_oocore)
+    from repro.core import KeyBatch
+    return KeyBatch([(x, 0.5 * x), (x, 0.5 * x + 1)])
+
+
 class Dedup:
     """Stateful per-partition worker: emits each value once (GO_ON after),
     used to pin that partition_by instantiates worker classes fresh."""
@@ -152,6 +159,48 @@ def np_double(x):
     # array keep their cold import cheap (and repro.core stays numpy-free)
     import numpy as np
     return np.asarray(x) * 2.0
+
+
+# -- out-of-core aggregation nodes (test_oocore; spawned children) -----------
+def mod10_pair(kv):
+    return kv[0] % 10
+
+
+def add_val(acc, kv):
+    return acc + kv[1]
+
+
+def add2(a, b):
+    return a + b
+
+
+def row_key(row):
+    return row[0]
+
+
+def row_stats(acc, row):
+    """Seeded fold over (key, value) rows -> (count, total)."""
+    return (acc[0] + 1, acc[1] + row[1])
+
+
+def merge_stats(a, b):
+    """Combine two (count, total) partials of one key."""
+    return (a[0] + b[0], a[1] + b[1])
+
+
+class RangeRows:
+    """Synthetic columnar dataset: ``reader(lo, hi)`` -> list of
+    ``(key, value)`` rows, deterministic from the row index alone, so
+    every shard (and every process) reads the same dataset with no file.
+    ``nrows``/``nkeys`` make it a drop-in for ``shard_source``."""
+
+    def __init__(self, nrows, nkeys):
+        self.nrows = nrows
+        self.nkeys = nkeys
+
+    def __call__(self, lo, hi):
+        nk = self.nkeys
+        return [((i * 2654435761) % nk, float(i % 97)) for i in range(lo, hi)]
 
 
 # -- child targets for test_shm ----------------------------------------------

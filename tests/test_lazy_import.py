@@ -38,6 +38,23 @@ def test_a2a_and_stream_ops_import_stays_jax_free():
         "assert 'jax' not in sys.modules, 'a2a/stream_ops imported jax'")
 
 
+def test_oocore_stays_jax_free():
+    """The out-of-core layer ships to every spawned vertex (SpillFold
+    partitions, combining readers): importing it, building a budgeted
+    shard_reduce, and running a spill-forced fold must never load jax."""
+    _run_isolated(
+        "import sys\n"
+        "from repro.core import (KeyBatch, MemoryBudget, SpillFold, "
+        "shard_reduce, shard_source, rekey_reduce)\n"
+        "import repro.core.oocore\n"
+        "def key(r): return r[0]\n"
+        "sf = SpillFold(abs, max, budget=MemoryBudget(400))\n"
+        "for x in range(-200, 200): sf.svc(x)\n"
+        "out = [kv for chunk in sf.svc_eos() for kv in chunk]\n"
+        "assert len(out) == 201 and sf._dir is None, (len(out), sf._dir)\n"
+        "assert 'jax' not in sys.modules, 'oocore imported jax'")
+
+
 def test_ir_construction_stays_jax_free():
     """Building and thread-lowering a keyed reduction — the exact work a
     spawned vertex's unpickle path does — must not touch jax either."""

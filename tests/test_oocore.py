@@ -1,0 +1,336 @@
+"""Out-of-core keyed aggregation (``repro.core.oocore``): SpillFold ==
+_KeyFold parity (including forced-spill runs under a tiny budget), the
+shared ``MemoryBudget`` board surfacing spill/stall telemetry in
+``FarmStats`` across the process boundary, columnar ``shard_source``
+coverage, the map-side ``CombiningReader``, multi-stage shuffles
+(``rekey_reduce`` — ``a2a∘a2a``) with the fuse-boundary and mesh
+one-shuffle guarantees, ``KeyBatch`` transport transparency, and the
+``benchmarks/run.py --only`` CLI error contract."""
+import os
+import sys
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import _procs_nodes as N
+from repro.core import (AllToAll, KeyBatch, LoweringError, MemoryBudget,
+                        Pipeline, SpillFold, Stage, fuse, lower,
+                        reduce_by_key, shard_reduce, shard_source)
+from repro.core.oocore import CombiningReader, ShardReader, rekey_reduce
+from repro.core.sched import SCHEDULERS, BudgetBackpressure
+from repro.core.skeleton import FusedNode
+from repro.core.stream_ops import _KeyFold
+
+
+def ref_rbk(xs, by, fold, seed=None):
+    d = {}
+    for x in xs:
+        k = by(x)
+        d[k] = fold(d[k], x) if k in d else (x if seed is None else fold(seed, x))
+    return d
+
+
+def run_source_skel(skel, backend, timeout=60):
+    """Source-left skeletons (shard_reduce) carry their own stream: run
+    via ``to_graph(None)`` instead of feeding an input iterable."""
+    g = lower(skel, backend).to_graph(None)
+    g.run()
+    return g.wait(timeout)
+
+
+# Programs built once at module scope (procs examples spawn real process
+# networks; the budgeted skeleton is shared to also pin re-runnability).
+# budget=256 < the ~150 bytes/entry × 5 keys hot state, so every example
+# that touches enough keys spills — the spill path runs constantly here.
+BRBK = reduce_by_key(N.mod5, "sum", nleft=2, nright=3, nkeys=5, budget=256)
+BRBK_T = lower(BRBK, "threads")
+BRBK_M = lower(BRBK, "mesh")
+BRBK_P = lower(BRBK, "procs")
+
+
+# -- SpillFold == _KeyFold (the drop-in contract) ----------------------------
+@given(st.lists(st.integers(-60, 60), max_size=80))
+@settings(max_examples=15, deadline=None)
+def test_spillfold_matches_keyfold_forced_spills(xs):
+    """Same by/fn, one instance each, tiny budget: the spill/merge path
+    must be observationally identical to the in-memory dict — and the
+    instance must clean its run directory and be back to initial state."""
+    fn = N.keep_larger
+    kf = _KeyFold(abs, fn)
+    sf = SpillFold(abs, fn, budget=MemoryBudget(300))
+    for x in xs:
+        kf.svc(x)
+        sf.svc(x)
+    want = kf.svc_eos() or []
+    got = []
+    for chunk in (sf.svc_eos() or []):
+        got.extend(chunk)
+    assert dict(got) == dict(want)
+    keys = [k for k, _v in got]
+    assert keys == sorted(keys)          # flush is sorted by key
+    assert sf._acc == {} and not sf._runs and sf._dir is None
+
+
+def test_spillfold_spills_and_accounts():
+    b = MemoryBudget(500)
+    sf = SpillFold(abs, N.keep_larger, budget=b)
+    for x in range(-300, 300):
+        sf.svc(x)
+    assert b.spills() > 0 and b.spill_bytes() > 0
+    assert b.held_total() <= b.limit
+    out = []
+    for chunk in sf.svc_eos():
+        out.extend(chunk)
+    assert dict(out) == ref_rbk(range(-300, 300), abs, N.keep_larger)
+    assert b.held_total() == 0           # flush released every byte
+
+
+def test_spillfold_seeded_fold_needs_combine():
+    with pytest.raises(ValueError, match="combine"):
+        SpillFold(N.row_key, N.row_stats, (0, 0.0), False,
+                  budget=MemoryBudget(1000))
+    with pytest.raises(ValueError, match="combine"):
+        shard_reduce(N.RangeRows(100, 5), N.row_key, N.row_stats,
+                     init=(0, 0.0), budget=1000)
+    # the Fold registry carries combine for "count": no explicit combine
+    skel = reduce_by_key(N.mod5, "count", nright=2, budget=400)
+    assert dict(lower(skel, "threads")(range(23))) == \
+        {k: sum(1 for x in range(23) if x % 5 == k) for k in range(5)}
+
+
+# -- three-backend parity of the SAME budgeted skeleton object ---------------
+@given(st.lists(st.integers(0, 1000), max_size=40))
+@settings(max_examples=8, deadline=None)
+def test_budgeted_rbk_parity_threads_mesh(xs):
+    """The mesh program compiles from the static KeyedReduce spec and
+    never looks at the right row — a budgeted skeleton must still lower
+    and agree (spilling is a host-side execution detail, not semantics)."""
+    want = ref_rbk(xs, N.mod5, lambda a, b: a + b)
+    assert dict(BRBK_T(xs)) == want
+    assert dict(BRBK_M(xs)) == want
+
+
+@given(st.lists(st.integers(0, 1000), max_size=16))
+@settings(max_examples=3, deadline=None)
+def test_budgeted_rbk_parity_procs(xs):
+    assert dict(BRBK_P(xs)) == ref_rbk(xs, N.mod5, lambda a, b: a + b)
+
+
+def test_budgeted_flush_byte_identical_across_backends():
+    """nright=1: one partition holds every key, so the full flush order
+    is observable — threads and procs must emit the identical sorted
+    list (the determinism the sorted _KeyFold/SpillFold flush buys)."""
+    skel = reduce_by_key(abs, "sum", nright=1, budget=2000)
+    xs = [x - 200 for x in range(400)]
+    t = lower(skel, "threads")(xs)
+    p = lower(skel, "procs")(xs)
+    assert t == p == sorted(t, key=lambda kv: kv[0])
+    assert skel.stats.spills > 0         # the tiny budget really spilled
+
+
+# -- the shared budget board across the process boundary ---------------------
+def test_procs_budget_board_surfaces_stats_cumulatively():
+    """Child-process spill counters must land in the parent's FarmStats
+    (ShmCounters board swap), and stay cumulative across runs of the
+    same skeleton object — the counters are lifetime totals."""
+    skel = reduce_by_key(abs, "sum", nright=2, budget=1500)
+    prog = lower(skel, "procs")
+    xs = [x - 300 for x in range(600)]
+    assert dict(prog(xs)) == ref_rbk(xs, abs, lambda a, b: a + b)
+    first = skel.stats.spills
+    assert first > 0 and skel.stats.spill_bytes > 0
+    assert dict(prog(xs)) == ref_rbk(xs, abs, lambda a, b: a + b)
+    assert skel.stats.spills > first     # second run adds to the totals
+
+
+def test_budget_backpressure_policy():
+    """The 'budget' scheduling policy stalls intake while the aggregate
+    held bytes sit over the high-water mark, counts each stall — and has
+    hysteresis: a stall that times out still over the line must not
+    repeat per placement (nothing downstream can drop held bytes without
+    new input), only after the aggregate first dips below the line."""
+    assert SCHEDULERS["budget"] is BudgetBackpressure
+    b = MemoryBudget(1000, nparts=2)
+    pol = BudgetBackpressure(b, max_stall_s=0.01).fresh()
+    pol.bind([None, None], None)
+    assert pol.pick() == 0               # under budget: plain round-robin
+    assert b.stalls() == 0
+    b.charge(0, 1000)
+    b.charge(1, 900)                     # 1900/2000 held > ¾ high-water
+    assert b.over_total()
+    assert pol.pick() == 1               # stalls (bounded), then proceeds
+    assert b.stalls() == 1
+    assert pol.pick() == 0               # still over, stall exhausted:
+    assert b.stalls() == 1               # no repeat stall per placement
+    b.charge(0, -1000)
+    b.charge(1, -900)
+    assert not b.over_total()
+    assert pol.pick() == 1               # dip below the line re-armed it
+    b.charge(0, 1000)
+    b.charge(1, 900)
+    assert pol.pick() == 0
+    assert b.stalls() == 2
+
+
+# -- columnar sharding -------------------------------------------------------
+def test_shard_source_covers_rows_exactly_once():
+    reader = N.RangeRows(1000, 7)
+    shards = shard_source(reader, 3, batch_rows=64)
+    seen = []
+    for s in shards:
+        while True:
+            out = s.svc(None)
+            if out is None:
+                break
+            seen.extend(out)
+    assert sorted(seen) == sorted(reader(0, 1000))
+
+
+def test_shard_reader_is_rerunnable():
+    s = ShardReader(N.RangeRows(100, 5), 0, 2, batch_rows=16)
+    def drain():
+        out = []
+        while True:
+            b = s.svc(None)
+            if b is None:
+                return out
+            out.extend(b)
+    assert drain() == drain()            # cursor reset at EOS
+
+
+def test_combining_reader_prefolds_and_evicts_batches():
+    """Map-side combine under a tiny bound: evictions leave as KeyBatch
+    partials, and re-combining every emission reproduces the exact fold."""
+    from repro.core import GO_ON
+    reader = N.RangeRows(2000, 50)
+    cr = CombiningReader(ShardReader(reader, 0, 1, batch_rows=128),
+                         N.row_key, N.row_stats, (0, 0.0), False,
+                         combine=N.merge_stats, limit_bytes=2000)
+    cr.svc_init()
+    pairs, batches = [], 0
+    while True:
+        out = cr.svc(None)
+        if out is None:
+            break
+        if out is GO_ON:
+            continue
+        assert type(out) is KeyBatch
+        batches += 1
+        pairs.extend(out)
+    tail = cr.svc_eos()
+    if tail:
+        pairs.extend(tail)
+    assert batches > 0                   # the bound really evicted early
+    assert len(pairs) > 50               # partials: more emissions than keys
+    acc = {}
+    for k, v in pairs:
+        acc[k] = N.merge_stats(acc[k], v) if k in acc else v
+    want = {}
+    for k, v in reader(0, 2000):
+        c, t = want.get(k, (0, 0.0))
+        want[k] = (c + 1, t + v)
+    assert acc == want
+
+
+# -- the whole composition: shard_reduce on both host backends ---------------
+@given(st.integers(2, 4), st.integers(1, 3))
+@settings(max_examples=4, deadline=None)
+def test_shard_reduce_threads(nleft, nright):
+    reader = N.RangeRows(3000, 200)
+    skel = shard_reduce(reader, N.row_key, N.row_stats, init=(0, 0.0),
+                        combine=N.merge_stats, nleft=nleft, nright=nright,
+                        budget=3000, batch_rows=256)
+    want = {}
+    for k, v in reader(0, 3000):
+        c, t = want.get(k, (0, 0.0))
+        want[k] = (c + 1, t + v)
+    assert dict(run_source_skel(skel, "threads")) == want
+    assert skel.stats.spills > 0
+
+
+def test_shard_reduce_procs_with_stats():
+    reader = N.RangeRows(4000, 300)
+    skel = shard_reduce(reader, N.row_key, N.row_stats, init=(0, 0.0),
+                        combine=N.merge_stats, nleft=2, nright=2,
+                        budget=3000, batch_rows=256)
+    want = {}
+    for k, v in reader(0, 4000):
+        c, t = want.get(k, (0, 0.0))
+        want[k] = (c + 1, t + v)
+    assert dict(run_source_skel(skel, "procs")) == want
+    assert skel.stats.spills > 0 and skel.stats.spill_bytes > 0
+
+
+# -- multi-stage shuffles: a2a ∘ a2a -----------------------------------------
+def test_rekey_reduce_threads_and_procs():
+    first = reduce_by_key(abs, "sum", nright=2, budget=2000)
+    chain = rekey_reduce(first, N.mod10_pair, N.add_val, init=0.0,
+                         combine=N.add2, nright=2, budget=1500)
+    xs = [x - 300 for x in range(600)]
+    ref1 = ref_rbk(xs, abs, lambda a, b: a + b)
+    want = {}
+    for k, v in ref1.items():
+        want[k % 10] = want.get(k % 10, 0.0) + v
+    assert dict(lower(chain, "threads")(xs)) == want
+    assert dict(lower(chain, "procs")(xs)) == want
+
+
+def test_rekey_reduce_is_two_a2a_and_fuse_never_crosses():
+    first = reduce_by_key(abs, "sum", nright=2, budget=2000)
+    chain = rekey_reduce(first, N.mod10_pair, N.add_val, init=0.0,
+                         combine=N.add2, nright=2)
+    assert [type(s) for s in chain.stages] == [AllToAll, AllToAll]
+    padded = Pipeline(Stage(N.f), Stage(N.g), chain.stages[0],
+                      Stage(N.sq), Stage(N.double), chain.stages[1])
+    fused = fuse(padded, force=True)
+    kinds = [type(s) for s in fused.stages]
+    assert kinds.count(AllToAll) == 2    # both shuffles survive as barriers
+    assert fused.stages[1] is chain.stages[0]   # untouched, not rebuilt
+    assert fused.stages[3] is chain.stages[1]
+    assert isinstance(fused.stages[0].node, FusedNode)  # fusion still runs
+    assert isinstance(fused.stages[2].node, FusedNode)  # between barriers
+
+
+def test_mesh_rejects_multi_stage_shuffle():
+    first = reduce_by_key(N.mod5, "sum", nkeys=5, nright=2)
+    chain = rekey_reduce(first, N.mod10_pair, N.add_val, init=0.0,
+                         combine=N.add2)
+    with pytest.raises(LoweringError, match="exactly one"):
+        lower(chain, "mesh")
+
+
+# -- KeyBatch transport transparency -----------------------------------------
+def test_keybatch_unpacks_for_batch_oblivious_nodes():
+    """A KeyBatch is one wire message, but a plain downstream node (and
+    the caller's results) must still see items — batching is transport,
+    not semantics, on both host backends."""
+    skel = Pipeline(Stage(N.emit_pair_batch), Stage(N.second))
+    want = sorted([0.5 * x for x in range(20)] + [0.5 * x + 1 for x in range(20)])
+    assert sorted(lower(skel, "threads")(range(20))) == want
+    assert sorted(lower(skel, "procs")(range(20))) == want
+
+
+# -- benchmarks/run.py CLI contract ------------------------------------------
+def _bench_main():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    try:
+        from benchmarks import run as bench_run
+    finally:
+        sys.path.pop(0)
+    return bench_run
+
+
+def test_bench_only_unknown_module_errors():
+    with pytest.raises(SystemExit) as e:
+        _bench_main().main(["--only", "definitely_not_a_benchmark"])
+    assert e.value.code != 0
+
+
+def test_bench_only_empty_selection_errors():
+    with pytest.raises(SystemExit) as e:
+        _bench_main().main(["--only", " , "])
+    assert e.value.code != 0
+
+
+def test_bench_registers_ooc_module():
+    assert "ooc_aggregation" in _bench_main().MODULES
