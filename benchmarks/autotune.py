@@ -1,0 +1,133 @@
+"""Autotune payoff — profile-guided re-lowering vs hand-tuned knobs.
+
+Two scenarios, each on the threads AND procs backends (the acceptance
+axes of the self-tuning ROADMAP item):
+
+**Skewed fine-grain Farm∘Farm** — two back-to-back farms of ~µs tasks
+(every ``SKEW_EVERY``-th task ``SKEW_FACTOR``× slower).  The hand knob
+is the declared ``grain=``: sub-threshold declarations let the static
+fusion pass merge the two farms into one (halving the arbiter crossings
+per item), a mis-declaration keeps them apart.  The grid sweeps
+``GRAIN_GRID`` and keeps the best; ``lower(tune=True)`` must land within
+~10% of that best *without being told the grain* — the pilot measures
+it.  (``ratio_vs_hand`` in the derived column; ≤ 1.10 is the target.)
+
+**Mis-grained pipeline** — three ~sub-µs stages all declaring
+``grain=10000``, the porting-study failure mode: the static lowering
+trusts the declaration, never fuses, and pays two vertex hand-offs per
+item.  ``tune=True`` measures the real service times, fuses the chain,
+and micro-batches the survivor.  (``speedup_vs_static``; ≥ 1.3× is the
+target.)
+
+The tuned timings are steady-state: the pilot/tuning cost is paid once
+on a warm-up call and the measured calls go straight to the tuned
+program — the amortization story ``TunedProgram`` exists for.  Ordered
+parity is asserted on every measured call, so the benchmark doubles as
+a correctness smoke for the retune rewrite.
+
+Workers are module-level functions (the procs backend pickles them to
+spawned vertices).  Same CSV contract as the other benchmark modules:
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Farm, Pipeline, Stage, lower
+from repro.core.sched import clear_handoff_cache
+
+NTASKS = 6000
+PILOT = 400
+REPEATS = 3
+NWORKERS = 4
+SKEW_EVERY = 8        # 8 ≡ 0 mod NWORKERS: rr pins every slow task
+SKEW_FACTOR = 8       # ... and slow means 8× the base grain
+FINE_US = 1.0         # farm scenario's base service time
+STAGE_US = 0.5        # pipeline scenario's per-stage service time
+MISGRAIN = 10000      # the hand mis-declaration (µs) both scenarios tune away
+GRAIN_GRID = (None, 1, 50, MISGRAIN)
+BACKENDS = ("threads", "procs")
+
+
+def _spin(us: float) -> None:
+    end = time.perf_counter() + us * 1e-6
+    while time.perf_counter() < end:
+        pass
+
+
+def _farm_f(x):
+    _spin(FINE_US * (SKEW_FACTOR if x % SKEW_EVERY == 0 else 1))
+    return x + 1
+
+
+def _farm_g(x):
+    _spin(FINE_US)
+    return x * 2
+
+
+def _st_a(x):
+    _spin(STAGE_US)
+    return x + 1
+
+
+def _st_b(x):
+    _spin(STAGE_US)
+    return x * 2
+
+
+def _st_c(x):
+    _spin(STAGE_US)
+    return x - 3
+
+
+def _timed(prog, xs, want):
+    best = None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        out = prog(xs)
+        dt = time.perf_counter() - t0
+        assert out == want, "ordered-output mismatch"
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def _farm_skel(grain):
+    return Pipeline(Farm(_farm_f, NWORKERS, ordered=True, grain=grain),
+                    Farm(_farm_g, NWORKERS, ordered=True, grain=grain))
+
+
+def run(emit):
+    xs = list(range(NTASKS))
+    clear_handoff_cache()  # don't inherit a threshold from another module
+
+    # -- scenario A: skewed fine-grain Farm∘Farm -----------------------------
+    want = [(_x + 1) * 2 for _x in xs]
+    for b in BACKENDS:
+        best_us, best_grain = None, None
+        for g in GRAIN_GRID:
+            prog = lower(_farm_skel(g), b)
+            us = _timed(prog, xs, want) / NTASKS * 1e6
+            if best_us is None or us < best_us:
+                best_us, best_grain = us, g
+        emit(f"farm_skew_{b}_hand_best", best_us,
+             f"nworkers={NWORKERS},grain={best_grain},"
+             f"grid={len(GRAIN_GRID)}")
+        tp = lower(_farm_skel(MISGRAIN), b, tune=True, tune_pilot=PILOT)
+        assert tp(xs) == want      # warm-up: pays the pilot + re-lower once
+        us_t = _timed(tp, xs, want) / NTASKS * 1e6
+        emit(f"farm_skew_{b}_tuned", us_t,
+             f"pilot={PILOT},ratio_vs_hand={us_t / best_us:.3f}")
+
+    # -- scenario B: mis-grained pipeline ------------------------------------
+    skel = Pipeline(Stage(_st_a, grain=MISGRAIN), Stage(_st_b, grain=MISGRAIN),
+                    Stage(_st_c, grain=MISGRAIN))
+    want = [_st_c(_st_b(_st_a(_x))) for _x in xs]
+    for b in BACKENDS:
+        static = lower(skel, b)    # trusts the declared (wrong) grain
+        us_s = _timed(static, xs, want) / NTASKS * 1e6
+        emit(f"pipe_misgrain_{b}_static", us_s, f"declared_grain={MISGRAIN}")
+        tp = lower(skel, b, tune=True, tune_pilot=PILOT)
+        assert tp(xs) == want      # warm-up
+        us_t = _timed(tp, xs, want) / NTASKS * 1e6
+        emit(f"pipe_misgrain_{b}_tuned", us_t,
+             f"pilot={PILOT},speedup_vs_static={us_s / us_t:.2f}")

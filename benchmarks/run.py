@@ -15,6 +15,8 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement):
   ooc_aggregation.py  — out-of-core keyed aggregation: wall time + peak RSS
                         per scale tier, budgeted spill path vs the
                         single-process in-memory baseline
+  autotune.py         — profile-guided re-lowering (tune=True) vs the best
+                        hand-tuned grain and vs the static default lowering
   smith_waterman.py   — Fig. 7 + Table 1: SW database search GCUPS
   roofline.py         — EXPERIMENTS §Roofline terms from the dry-run artifacts
 
@@ -24,6 +26,19 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement):
 over run — CI uploads ``BENCH_results.json`` as an artifact.  ``--only
 a,b`` restricts the run to the named modules (smoke configs stay the
 caller's job: set module attributes before calling :func:`main`).
+
+``--check-baseline PATH`` is the perf-regression gate: after the run,
+every (benchmark, config) row present in both the fresh results and the
+committed baseline JSON (same bench-rows/1 schema) is compared on
+``us_per_item``, and the process exits non-zero if any row got slower
+than ``baseline × (1 + tolerance)`` (``--tolerance``, default 0.35 —
+generous because CI machines are noisy and smoke tiers are small).
+Rows on only one side are reported and skipped, so adding a benchmark
+never breaks the gate before the baseline is re-recorded.  To re-record
+``benchmarks/baseline.json`` after an intended perf change, run the CI
+smoke invocation (the module-attribute overrides in the bench-JSON step
+of ``.github/workflows/ci.yml``) with ``--json benchmarks/baseline.json``
+and commit the result.
 
 Skeleton API
 ------------
@@ -49,7 +64,7 @@ from typing import List, Optional, Tuple
 
 MODULES = ("queues", "farm_overhead", "farm_composition", "skeleton_parity",
            "sched_policies", "proc_farm", "a2a_shuffle", "ooc_aggregation",
-           "smith_waterman", "roofline")
+           "autotune", "smith_waterman", "roofline")
 
 
 def _emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -64,6 +79,13 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--only", metavar="MODS", default=None,
                     help="comma-separated benchmark modules to run "
                          f"(default: all of {','.join(MODULES)})")
+    ap.add_argument("--check-baseline", metavar="PATH", default=None,
+                    help="compare rows against a committed bench-rows/1 "
+                         "baseline and exit non-zero on a regression past "
+                         "--tolerance (the CI perf gate)")
+    ap.add_argument("--tolerance", type=float, default=0.35,
+                    help="allowed fractional slowdown per row before the "
+                         "baseline check fails (default 0.35)")
     args = ap.parse_args(argv)
 
     names = MODULES if args.only is None else tuple(
@@ -101,6 +123,42 @@ def main(argv: Optional[List[str]] = None) -> None:
                       indent=2, sort_keys=True)
         print(f"# wrote {sum(map(len, results.values()))} rows "
               f"from {len(results)} benchmarks to {args.json}", flush=True)
+
+    if args.check_baseline:
+        check_baseline(rows, args.check_baseline, args.tolerance)
+
+
+def check_baseline(rows: List[Tuple[str, str, float, str]], path: str,
+                   tolerance: float) -> None:
+    """The perf-regression gate: raise ``SystemExit(1)`` if any row shared
+    with the baseline regressed past ``baseline × (1 + tolerance)``."""
+    with open(path) as f:
+        base = json.load(f)
+    if base.get("schema") != "bench-rows/1":
+        raise SystemExit(f"baseline {path} is not bench-rows/1 "
+                         f"(schema={base.get('schema')!r})")
+    baseline = {(bench, r["config"]): float(r["us_per_item"])
+                for bench, rs in base.get("results", {}).items()
+                for r in rs}
+    fresh = {(bench, config): us for bench, config, us, _ in rows}
+    regressions = []
+    compared = 0
+    for key in sorted(set(fresh) & set(baseline)):
+        compared += 1
+        was, now = baseline[key], fresh[key]
+        if was > 0 and now > was * (1.0 + tolerance):
+            regressions.append((key, was, now))
+    skipped = sorted(set(fresh) ^ set(baseline))
+    for key in skipped:
+        side = "baseline-only" if key in baseline else "new"
+        print(f"# baseline: skipping {key[0]}/{key[1]} ({side} row)")
+    print(f"# baseline: {compared} rows compared against {path} "
+          f"(tolerance {tolerance:+.0%})", flush=True)
+    if regressions:
+        for (bench, config), was, now in regressions:
+            print(f"# REGRESSION {bench}/{config}: {was:.3f} -> {now:.3f} "
+                  f"us/item ({now / was - 1.0:+.0%})", flush=True)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

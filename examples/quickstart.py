@@ -7,7 +7,9 @@
      scheduling policies (Farm(scheduling=...)), the grain-aware
      fusion pass (lower(..., fuse=...)), the all-to-all keyed
      shuffle (reduce_by_key — §1d), and its out-of-core form
-     (budget= spill-to-disk folds — §1f);
+     (budget= spill-to-disk folds — §1f), and the self-tuning loop
+     (profile a pilot slice, retune the IR from the measurements,
+     replay on any backend — §1g);
   2. the paper's application: Smith-Waterman database search through an
      ordered farm;
   3. the LM framework: one reduced-config train step + one decode step.
@@ -142,6 +144,32 @@ def main():
     print(f"budgeted reduce_by_key: same result, spills="
           f"{budgeted.stats.spills} spill_bytes={budgeted.stats.spill_bytes}")
     assert budgeted.stats.spills > 0  # the 100-byte budget forced runs
+
+    # -- 1g. self-tuning: profile -> retune -> replay ------------------------
+    # Declared knobs lie (here: grain=10000 on sub-µs stages, so the
+    # static lowering never fuses).  profile() runs a pilot slice through
+    # an instrumented threads lowering and records per-stage service
+    # times, queue high-water marks, and the calibrated hand-off cost;
+    # retune() is a pure IR rewrite from those measurements — measured
+    # grains, fusion at the measured threshold, rate-ratio ring sizes,
+    # micro-batched survivors — and never changes results.  The same
+    # profile (it is JSON: prof.save/Profile.load) retunes the procs
+    # lowering too; service times are a property of the node functions.
+    from repro.core import profile, retune
+    misgrained = Pipeline(Stage(_inc, grain=10000), Stage(_sq, grain=10000))
+    prof = profile(misgrained, range(200))          # the pilot slice
+    tuned = retune(misgrained, prof)                # the rewrite
+    want = [_sq(_inc(x)) for x in range(50)]
+    assert lower(tuned, "threads", fuse=False)(range(50)) == want
+    assert lower(tuned, "procs", fuse=False)(range(50)) == want
+    print(f"retune: handoff={prof.handoff_us:.2f}us, "
+          f"{len(misgrained.stages)} stages -> "
+          f"{len(tuned.stages) if hasattr(tuned, 'stages') else 1}")
+    # or let the runtime do both phases: lower(..., tune=True) profiles a
+    # pilot off the front of the first stream, then replays the rest
+    # (and every later call) through the tuned program.
+    tp = lower(misgrained, "threads", tune=True, tune_pilot=64)
+    assert tp(range(200)) == [_sq(_inc(x)) for x in range(200)]
 
     # -- 2. the paper's app: SW database search (host-only payloads) ---------
     rng = np.random.default_rng(0)

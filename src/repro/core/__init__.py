@@ -16,7 +16,8 @@ from .lockq import LockQueue
 from .shm import ShmCounters, ShmFlag, ShmRing
 from .sched import (SCHEDULERS, BudgetBackpressure, CostModel, KeyAffinity,
                     OnDemand, RoundRobin, Scheduler, WorkStealing,
-                    calibrate_handoff_us, make_scheduler, spread_cpus)
+                    calibrate_handoff_us, clear_handoff_cache, make_scheduler,
+                    spread_cpus)
 from .skeleton import (GO_ON, AllToAll, EmitMany, Farm, FarmStats, Feedback,
                        FnNode, FusedNode, KeyBatch,
                        LatencyReservoir, LoweringError, MeshProgram, Pipeline,
@@ -30,6 +31,8 @@ from .stream_ops import (FOLDS, Fold, KeyedReduce, partition_by,
                          reduce_by_key, window)
 from .oocore import (CombiningReader, MemoryBudget, ShardReader, SpillFold,
                      rekey_reduce, shard_reduce, shard_source)
+from .autotune import (Profile, StageProfile, TunedProgram, auto_batch,
+                       plan_mesh, profile, retune, ring_capacity)
 from .farm import TaskFarm
 from .allocator import PagePool, PoolExhausted
 from .mdf import MDFExecutor, MDFTask
@@ -61,7 +64,9 @@ __all__ = [
     "shard_source", "shard_reduce", "rekey_reduce",
     "SCHEDULERS", "Scheduler", "RoundRobin", "OnDemand", "WorkStealing",
     "CostModel", "KeyAffinity", "BudgetBackpressure", "make_scheduler",
-    "calibrate_handoff_us",
+    "calibrate_handoff_us", "clear_handoff_cache",
+    "Profile", "StageProfile", "TunedProgram", "profile", "retune",
+    "plan_mesh", "auto_batch", "ring_capacity",
     "FarmStats", "LatencyReservoir", "FnNode", "TaskFarm", "ff_node",
     "PagePool", "PoolExhausted",
     "MDFExecutor", "MDFTask",

@@ -209,10 +209,14 @@ def _a2a_budgets(skel: AllToAll) -> List[Any]:
     share one budget."""
     out: List[Any] = []
     for n in skel.right_nodes:
-        b = getattr(n, "budget", None)
-        if b is not None and hasattr(b, "fold_into") \
-                and not any(b is x for x in out):
-            out.append(b)
+        # a fused right row (autotune's a2a absorption) hides the budget
+        # holder behind a FusedNode wrapper — look through its parts
+        parts = getattr(n, "nodes", None) or [n]
+        for p in parts:
+            b = getattr(p, "budget", None)
+            if b is not None and hasattr(b, "fold_into") \
+                    and not any(b is x for x in out):
+                out.append(b)
     return out
 
 

@@ -43,7 +43,19 @@ from ..compat import axis_size as _axis_size
 from .dchannel import ring_send
 
 __all__ = ["dispatch", "combine", "farm_map", "farm_until",
-           "roundrobin_dest", "DispatchInfo"]
+           "roundrobin_dest", "farm_utilisation", "DispatchInfo"]
+
+
+def farm_utilisation(n_items: int, n_workers: int) -> float:
+    """Worker-axis occupancy for ``n_items`` over ``n_workers``: the last
+    dispatch round is ragged, so utilisation is ``n / (W * ceil(n/W))``.
+    The autotuner's factorization model uses this with
+    :func:`repro.core.dpipeline.pipeline_utilisation` to trade worker
+    raggedness against pipeline fill/drain bubbles."""
+    if n_items <= 0 or n_workers <= 0:
+        return 0.0
+    rounds = -(-n_items // n_workers)
+    return n_items / (n_workers * rounds)
 
 
 class DispatchInfo(Tuple):

@@ -26,11 +26,41 @@ from jax import lax
 from ..compat import axis_size as _axis_size, vma_align as _vma_align
 from .dchannel import chain_send
 
-__all__ = ["pipeline_apply", "pipeline_utilisation", "negotiate_stage_axis"]
+__all__ = ["pipeline_apply", "pipeline_utilisation", "negotiate_stage_axis",
+           "best_factorization"]
 
 
 def pipeline_utilisation(n_stages: int, n_micro: int) -> float:
     return n_micro / (n_micro + n_stages - 1)
+
+
+def best_factorization(n_stages: int, n_devices: int,
+                       stage_costs=None, n_micro=None):
+    """Pick the ``(stage, worker)`` mesh factorization with the higher
+    modelled throughput — the autotuner's mesh counterpart of auto-grain.
+
+    Only two factorizations are expressible (the pipelined ``select_n``
+    schedule requires the stage axis to equal the stage count):
+    ``(1, n_devices)`` runs the stage chain sequentially inside one
+    ``shard_map`` with all devices on the worker axis; ``(n_stages,
+    n_devices / n_stages)`` streams microbatches through the chain.
+    With measured per-stage costs (µs, e.g. from an autotune pilot) the
+    model scores sequential as ``n_devices / sum(costs)`` and pipelined
+    as ``workers * pipeline_utilisation(S, M) / max(costs)`` — the
+    pipeline clocks at its slowest stage but overlaps stages, minus the
+    fill/drain bubble.  Returns the winning ``(n_stage, n_worker)``."""
+    seq = (1, max(1, n_devices))
+    if n_stages <= 1 or n_devices < n_stages or n_devices % n_stages:
+        return seq
+    piped = (n_stages, n_devices // n_stages)
+    costs = list(stage_costs) if stage_costs else [1.0] * n_stages
+    if len(costs) != n_stages or min(costs) <= 0:
+        costs = [1.0] * n_stages
+    m = n_micro if n_micro and n_micro > 0 else 4 * n_stages
+    seq_score = n_devices / sum(costs)
+    piped_score = (piped[1] * pipeline_utilisation(n_stages, m)
+                   / max(costs))
+    return piped if piped_score > seq_score else seq
 
 
 def negotiate_stage_axis(n_stages: int, n_devices: int):

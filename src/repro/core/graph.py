@@ -760,6 +760,23 @@ class Graph:
     def run_and_wait(self) -> List[Any]:
         return self.run().wait()
 
+    def sample_high_water(self, into: Dict[str, int]) -> Dict[str, int]:
+        """Profile tap: record each vertex's current outbound queue depth
+        into ``into``, keeping the per-name maximum across calls.  Autotune
+        polls this from the caller thread while a pilot run drains —
+        ``len()`` on every ring class is a racy-but-benign read of the
+        head/tail indices, so no locks and no effect on the stream."""
+        for v in self.vertices:
+            depth = 0
+            for ring in v.outs:
+                try:
+                    depth = max(depth, len(ring))
+                except TypeError:
+                    pass
+            if depth > into.get(v.name, -1):
+                into[v.name] = depth
+        return into
+
 
 # ---------------------------------------------------------------------------
 # threads lowering: IR tree -> vertices + rings
@@ -794,7 +811,8 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
 
     if isinstance(skel, Source):
         assert in_ring is None, "Source cannot have an upstream edge"
-        return build(Stage(skel.node, name=skel.name), g, None, terminal)
+        return build(Stage(skel.node, name=skel.name,
+                           capacity=skel.capacity), g, None, terminal)
 
     if isinstance(skel, Pipeline):
         ring = in_ring
@@ -842,7 +860,7 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
             g.connect(w, merge, capacity=cap, queue_class=qc)
         if terminal:
             return None
-        ring = g.channel()
+        ring = g.channel(skel.capacity)
         merge.outs.append(ring)
         return ring
 
@@ -851,7 +869,8 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
         v.ins.extend(ring_list(in_ring))
         if terminal:
             return None
-        ring = g.channel()
+        # per-edge capacity: a tuned Stage sizes its own outbound ring
+        ring = g.channel(getattr(skel, "capacity", None))
         v.outs.append(ring)
         return ring
 

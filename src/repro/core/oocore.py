@@ -146,13 +146,27 @@ class MemoryBudget:
     SLOTS_PER_PART = 3
     _BYTES, _SPILLS, _SPILL_BYTES = 0, 1, 2
 
-    def __init__(self, limit_bytes: int, nparts: int = 1):
+    def __init__(self, limit_bytes: int, nparts: int = 1, *,
+                 adaptive: bool = False, min_limit: Optional[int] = None,
+                 max_limit: Optional[int] = None):
         if int(limit_bytes) <= 0:
             raise ValueError(f"budget must be positive, got {limit_bytes!r}")
         self.limit = int(limit_bytes)
         self.nparts = max(1, int(nparts))
         self._local = [0] * self.n_slots
         self._board: Any = None
+        # adaptive mode: after each run (the fold_into finalizer) the
+        # limit is resized from that run's spill/stall deltas — stalls
+        # mean intake outran the hot set (shrink it so spilling starts
+        # earlier and the scatter stops blocking); a clean run grows the
+        # hot set back toward max_limit to spill less next time.
+        self.adaptive = bool(adaptive)
+        self.min_limit = int(min_limit) if min_limit is not None \
+            else max(1, self.limit // 8)
+        self.max_limit = int(max_limit) if max_limit is not None \
+            else self.limit * 8
+        self._seen_spills = 0
+        self._seen_stalls = 0
 
     @property
     def n_slots(self) -> int:
@@ -225,14 +239,41 @@ class MemoryBudget:
     def stalls(self) -> int:
         return self._get(self.SLOTS_PER_PART * self.nparts)
 
+    def adapt(self) -> int:
+        """Resize the limit from the spill/stall deltas since the last
+        call (one run, when driven by the ``fold_into`` finalizer).
+
+        Stalls dominate the cost ladder (a stalled scatter blocks the
+        whole intake, a spill costs one sorted-run write), so any stalls
+        ⇒ halve the limit: a smaller hot set spills earlier and keeps the
+        aggregate under the ¾ high-water that trips backpressure.  A run
+        with neither stalls nor spills had headroom ⇒ double the limit
+        (toward ``max_limit``) so future runs keep more keys hot.  A run
+        that spilled but never stalled is the regime working as designed
+        — hold.  Returns the (possibly unchanged) limit."""
+        d_spills = self.spills() - self._seen_spills
+        d_stalls = self.stalls() - self._seen_stalls
+        self._seen_spills += d_spills
+        self._seen_stalls += d_stalls
+        if d_stalls > 0:
+            self.limit = max(self.min_limit, self.limit // 2)
+        elif d_spills == 0:
+            self.limit = min(self.max_limit, self.limit * 2)
+        return self.limit
+
     def fold_into(self, stats: Any) -> None:
         """Surface the telemetry in a ``FarmStats``.  The budget's
         counters are cumulative across runs of the same skeleton, so the
         graph finalizer *assigns* (not adds) — ``stats`` then always
-        shows lifetime totals, matching the counters it mirrors."""
+        shows lifetime totals, matching the counters it mirrors.  An
+        ``adaptive=True`` budget also re-sizes its limit here, so each
+        ``lower()`` run of the same skeleton starts from the adapted
+        value (procs vertices get the new limit with the next pickle)."""
         stats.spills = self.spills()
         stats.spill_bytes = self.spill_bytes()
         stats.backpressure_stalls = self.stalls()
+        if self.adaptive:
+            self.adapt()
 
     def __repr__(self) -> str:
         return (f"MemoryBudget(limit={self.limit}, nparts={self.nparts}, "

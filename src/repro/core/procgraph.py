@@ -1007,6 +1007,23 @@ class ProcGraph:
             return int(grain) if grain else 1
         return max(1, int(self.batch))
 
+    def sample_high_water(self, into: Dict[str, int]) -> Dict[str, int]:
+        """Profile tap, mirroring :meth:`graph.Graph.sample_high_water`:
+        record each vertex's current outbound queue depth into ``into``,
+        keeping the per-name maximum across calls.  The caller owns the
+        ring segments, so ``len()`` (a read of the shared head/tail
+        counters) works cross-process without touching the stream."""
+        for v in self.vertices:
+            depth = 0
+            for ring in v.outs:
+                try:
+                    depth = max(depth, len(ring))
+                except (TypeError, OSError):
+                    pass
+            if depth > into.get(v.name, -1):
+                into[v.name] = depth
+        return into
+
     def add(self, v: ProcVertex) -> ProcVertex:
         v.failed = self.failed_event
         # control edge: SPSC (this vertex produces, the caller consumes);
@@ -1301,8 +1318,8 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
 
     if isinstance(skel, Source):
         assert in_ring is None, "Source cannot have an upstream edge"
-        return build(Stage(skel.node, name=skel.name, grain=skel.grain),
-                     g, None, terminal)
+        return build(Stage(skel.node, name=skel.name, grain=skel.grain,
+                           capacity=skel.capacity), g, None, terminal)
 
     if isinstance(skel, Pipeline):
         ring = in_ring
@@ -1360,7 +1377,7 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
         if terminal:
             merge.outs.append(g.results_ring())
             return None
-        ring = g.channel()
+        ring = g.channel(skel.capacity)
         merge.outs.append(ring)
         return ring
 
@@ -1371,7 +1388,8 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
         if terminal:
             v.outs.append(g.results_ring())
             return None
-        ring = g.channel()
+        # per-edge capacity: a tuned Stage sizes its own outbound ring
+        ring = g.channel(getattr(skel, "capacity", None))
         v.outs.append(ring)
         return ring
 

@@ -54,7 +54,8 @@ from .spsc import SPSCQueue
 __all__ = [
     "Scheduler", "RoundRobin", "OnDemand", "WorkStealing", "CostModel",
     "KeyAffinity", "BudgetBackpressure",
-    "SCHEDULERS", "make_scheduler", "calibrate_handoff_us", "spread_cpus",
+    "SCHEDULERS", "make_scheduler", "calibrate_handoff_us",
+    "clear_handoff_cache", "spread_cpus",
 ]
 
 _EMPTY = SPSCQueue._EMPTY
@@ -466,17 +467,29 @@ def make_scheduler(spec: Any) -> Scheduler:
 _HANDOFF_CACHE: Optional[float] = None
 
 
+def clear_handoff_cache() -> None:
+    """Drop the process-wide hand-off calibration so the next
+    ``calibrate_handoff_us()`` re-measures.  Autotune pilots and tests
+    call this when the cached value may describe a different load regime
+    (e.g. a measurement taken while an earlier benchmark saturated the
+    cores)."""
+    global _HANDOFF_CACHE
+    _HANDOFF_CACHE = None
+
+
 def calibrate_handoff_us(ntasks: int = 2000, repeats: int = 2,
-                         force: bool = False) -> float:
+                         force: bool = False, *,
+                         recalibrate: bool = False) -> float:
     """Measured per-item cost (µs) of ONE vertex hand-off on this machine:
     the same stream through ``Pipeline(Stage(a), Stage(b))`` (one SPSC
     hand-off) vs the pre-fused single ``Stage(b∘a)``, best of ``repeats``
     — the measurement ``benchmarks/skeleton_parity.py`` makes against the
     mesh backend, reused as the auto threshold for ``fuse(skel)``: a stage
     declaring ``grain=`` below this is cheaper to fuse than to stream.
-    Cached per process (``force=True`` re-measures)."""
+    Cached per process; ``force=True`` / ``recalibrate=True`` re-measure
+    (and refresh the cache), ``clear_handoff_cache()`` just invalidates."""
     global _HANDOFF_CACHE
-    if _HANDOFF_CACHE is not None and not force:
+    if _HANDOFF_CACHE is not None and not (force or recalibrate):
         return _HANDOFF_CACHE
     from .skeleton import Pipeline, Stage, lower
 

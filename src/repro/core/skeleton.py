@@ -387,26 +387,36 @@ def as_skeleton(x: Any) -> Skeleton:
 
 
 class Stage(Skeleton):
-    """A single sequential node (paper Fig. 2) as a one-vertex network."""
+    """A single sequential node (paper Fig. 2) as a one-vertex network.
+
+    ``capacity`` sizes this stage's *outbound* SPSC ring on the host
+    backends (``None`` = the graph-wide default) — the per-edge knob the
+    autotune pass (:mod:`repro.core.autotune`) sets from the measured
+    producer/consumer service-rate ratio."""
 
     def __init__(self, node: Any, *, name: str = "ff-stage",
-                 grain: Optional[int] = None):
+                 grain: Optional[int] = None,
+                 capacity: Optional[int] = None):
         self.node = _as_node(node)
         self.name = name
         self.grain = grain
+        self.capacity = capacity
 
 
 class Source(Skeleton):
     """A stream source: an ``ff_node`` (``svc(None)`` protocol) or any
     iterable, replayed then EOS.  ``grain`` carries the same per-stage
     hint as :class:`Stage` (the procs backend's ``batch="grain"`` reads
-    it as the source's emit-batch size)."""
+    it as the source's emit-batch size); ``capacity`` sizes the outbound
+    ring like :class:`Stage`."""
 
     def __init__(self, items: Any, *, name: str = "ff-source",
-                 grain: Optional[int] = None):
+                 grain: Optional[int] = None,
+                 capacity: Optional[int] = None):
         self.node = items if isinstance(items, ff_node) else _SeqNode(items)
         self.name = name
         self.grain = grain
+        self.capacity = capacity
 
 
 class Pipeline(Skeleton):
@@ -798,6 +808,90 @@ def _absorb_stage_into_farm(farm: "Farm", stage: "Stage") -> "Farm":
         stats=farm.stats)
 
 
+def _farm_fusible(f: "Skeleton", threshold_us: Optional[float],
+                  force: bool) -> bool:
+    if not isinstance(f, Farm):
+        return False
+    if force:
+        return True
+    return (f.grain is not None and threshold_us is not None
+            and f.grain < threshold_us)
+
+
+def _farms_mergeable(a: "Farm", b: "Farm") -> bool:
+    """Farm∘Farm is collapsible when the junction between them carries no
+    semantics of its own: no wrap-around loop on either side (the fused
+    worker would re-run both nodes every trip), no collector on ``a`` / no
+    emitter on ``b`` (both run *between* the farms, which fusion removes),
+    no speculation (a re-issued fused task would redo both halves), equal
+    ``ordered`` (a's merge establishes the order b's dispatch re-tags —
+    fusing an ordered with an unordered farm would invent or destroy an
+    ordering the unfused network had), and every worker stateless (the
+    fused farm replicates ``max(nworkers)`` copies).  ``b``'s workers must
+    be plain chains, not already-absorbed ``flatten=False`` junctions
+    (their ``_FarmEmitMany`` flattening belongs to b's own merge)."""
+    return (a.feedback is None and b.feedback is None
+            and a.collector is None and b.emitter is None
+            and not a.speculative and not b.speculative
+            and a.ordered == b.ordered
+            and all(_stateless(n) for n in a.worker_nodes)
+            and all(_stateless(n) for n in b.worker_nodes)
+            and all(not (isinstance(n, FusedNode) and not n.flatten)
+                    for n in b.worker_nodes))
+
+
+def _merge_farms(a: "Farm", b: "Farm") -> "Farm":
+    """ONE farm of fused workers: worker i runs a's node then b's
+    (``_absorb_one`` — the same worker∘stage junction semantics the
+    farm-absorb rewrite uses, so a ``GO_ON`` from a's half retires the
+    token exactly as a's merge would have, and a multi-emit from a's half
+    crosses into b's node whole, as b's dispatch would have seen it).
+    ``a``'s scheduling/emitter and ``b``'s collector-free tail survive;
+    ``b``'s scheduling is subsumed by the fused dispatch."""
+    n = max(a.nworkers, b.nworkers)
+    workers = [_absorb_one(a.worker_nodes[i % a.nworkers],
+                           b.worker_nodes[i % b.nworkers])
+               for i in range(n)]
+    grain = (a.grain + b.grain
+             if a.grain is not None and b.grain is not None else None)
+    return Farm(workers, emitter=a.emitter, ordered=a.ordered, grain=grain,
+                scheduling=a.scheduling,
+                queue_class=a.queue_class or b.queue_class,
+                capacity=a.capacity or b.capacity, stats=a.stats)
+
+
+def _a2a_can_absorb(a2a: "Skeleton", stage: "Stage") -> bool:
+    """A stateless post-shuffle stage can sink into the right row when the
+    rewrite is invisible: unordered (the ordered reorder stage runs *after*
+    the rights — absorbing under it would re-tag flush items), no
+    ``reduce=`` spec (the mesh shuffle program runs the spec INSTEAD of the
+    right nodes, so an absorbed stage would silently vanish there), and no
+    batch-aware or budget-carrying right nodes (the ``FusedNode`` wrapper
+    would hide ``accepts_batches``/``budget`` from the vertex and the
+    budget-board plumbing — see :func:`repro.core.a2a._a2a_budgets`)."""
+    return (isinstance(a2a, AllToAll) and not a2a.ordered
+            and a2a.reduce is None and _stateless(stage.node)
+            and not any(getattr(n, "accepts_batches", False)
+                        or getattr(n, "budget", None) is not None
+                        for n in a2a.right_nodes))
+
+
+def _absorb_stage_into_a2a(a2a: "AllToAll", stage: "Stage") -> "AllToAll":
+    """Rebuild the shuffle with the stage chained behind every right-row
+    vertex (flatten=True: the rights ARE stage vertices, so stage∘stage
+    chain semantics apply — including ``svc_eos`` flush items streaming
+    through the absorbed stage, exactly as the separate vertex saw them)."""
+    rights = [FusedNode(_chain_parts(n) + _chain_parts(stage.node))
+              for n in a2a.right_nodes]
+    new = AllToAll(a2a.left_nodes, rights, by=a2a.by, nleft=a2a.nleft,
+                   nright=a2a.nright, ordered=False,
+                   scheduling=a2a.scheduling, reduce=None, grain=a2a.grain,
+                   name=a2a.name, queue_class=a2a.queue_class,
+                   capacity=a2a.capacity)
+    new.stats = a2a.stats  # telemetry identity survives the rewrite
+    return new
+
+
 def fuse(skel: Any, *, threshold_us: Optional[float] = None,
          force: bool = False) -> "Skeleton":
     """Grain-aware fusion pass (ROADMAP "graph-level fusion"): rewrite the
@@ -818,6 +912,21 @@ def fuse(skel: Any, *, threshold_us: Optional[float] = None,
       worker).  Farms with ``feedback=`` or a collector node, and stateful
       stage nodes, are never absorbed.
 
+    Two more rewrites landed with the autotune pass (ROADMAP "self-tuning
+    runtime"), both driven by the same grain-vs-threshold test:
+
+    * **farm ∘ farm** — adjacent ``Farm``\\ s whose grains BOTH sit under
+      the threshold collapse into ONE farm of :class:`FusedNode` workers
+      (``_merge_farms``): four arbiters and a full ring layer become two
+      arbiters, and each item pays one dispatch instead of two.  Requires
+      stateless workers, matching ``ordered``, and a semantically empty
+      junction (no collector on the left / emitter on the right, no
+      feedback, no speculation) — see :func:`_farms_mergeable`.
+    * **a2a ∘ trailing stage** — a sub-threshold stateless ``Stage`` after
+      an *unordered, spec-free* :class:`AllToAll` sinks into every
+      right-row vertex (``_absorb_stage_into_a2a``), removing the M→1
+      fan-in hand-off behind the shuffle.
+
     ``force=True`` fuses every adjacent eligible pair regardless of grain
     (used by tests/benchmarks to pin behaviour); the default ``"auto"``
     mode of ``lower(skel, "threads")`` calls this with the calibrated
@@ -825,12 +934,13 @@ def fuse(skel: Any, *, threshold_us: Optional[float] = None,
     only when some stage actually declares a grain — skeletons that don't
     opt in are untouched.
 
-    An :class:`AllToAll` is a hard fusion boundary: merging a stage into
-    (or across) the shuffle would collapse its N×M edge matrix into one
-    vertex and silently serialise the keyed partitioning.  Neither rewrite
-    matches it — it is not a :class:`Stage` and never absorbs — so stages
-    on either side of an all-to-all fuse among themselves but never with
-    or through it (``tests/test_a2a.py`` pins this).
+    An :class:`AllToAll` otherwise stays a hard fusion boundary: merging a
+    stage into (or across) the shuffle's scatter side, an *ordered* or
+    ``reduce=``-carrying shuffle, or a budgeted right row would change
+    what the N×M matrix computes or hide the budget/batch plumbing — only
+    the narrow right-row absorption above is ever applied, and
+    ``tests/test_a2a.py`` pins that a ``reduce_by_key`` shuffle is
+    untouched even under ``force=True``.
     """
     skel = as_skeleton(skel)
     if not isinstance(skel, Pipeline):
@@ -846,6 +956,14 @@ def fuse(skel: Any, *, threshold_us: Optional[float] = None,
             if isinstance(prev, Farm) and _farm_can_absorb(prev, s):
                 out[-1] = _absorb_stage_into_farm(prev, s)
                 continue
+            if isinstance(prev, AllToAll) and _a2a_can_absorb(prev, s):
+                out[-1] = _absorb_stage_into_a2a(prev, s)
+                continue
+        elif _farm_fusible(s, threshold_us, force) \
+                and _farm_fusible(prev, threshold_us, force) \
+                and _farms_mergeable(prev, s):
+            out[-1] = _merge_farms(prev, s)
+            continue
         out.append(s)
     return out[0] if len(out) == 1 else Pipeline(*out)
 
@@ -876,8 +994,24 @@ def lower(skel: Any, backend: str = "threads", **opts: Any):
     stream ``items`` through the network and returns the output list.
     Backends are a registry (``BACKENDS``) so scheduling policies and
     fused runtimes can plug in without touching the IR.
+
+    ``tune=True`` makes the compile two-phase: the first call runs a
+    bounded pilot slice of the stream through an instrumented threads
+    lowering, records per-stage service times / queue high-water marks /
+    hand-off cost into a :class:`repro.core.autotune.Profile`, re-lowers
+    via ``retune()`` with measured grains and ring capacities, and runs
+    the remainder (plus all later calls) through the tuned program.
+    ``tune_pilot=`` bounds the pilot slice (item count); ``profile=``
+    skips the pilot entirely and re-lowers from a saved/loaded Profile.
     """
     skel = as_skeleton(skel)
+    tune = opts.pop("tune", False)
+    tune_pilot = opts.pop("tune_pilot", None)
+    profile = opts.pop("profile", None)
+    if tune or profile is not None:
+        from .autotune import TunedProgram
+        return TunedProgram(skel, backend, pilot=tune_pilot,
+                            profile=profile, opts=opts)
     try:
         cls = BACKENDS[backend]
     except KeyError:
@@ -1013,7 +1147,8 @@ class MeshProgram:
 
     def __init__(self, skeleton: Skeleton, *, devices: Optional[int] = None,
                  grain: Optional[int] = None, capacity: Optional[int] = None,
-                 block: int = 64, check_vma: Optional[bool] = None):
+                 block: int = 64, check_vma: Optional[bool] = None,
+                 factorization: Optional[Tuple[int, int]] = None):
         import jax
         from . import dpipeline
 
@@ -1025,8 +1160,20 @@ class MeshProgram:
         self.block = block
         self.check_vma = check_vma
         ndev = len(jax.devices()) if devices is None else devices
-        self.n_stage, self.n_worker = dpipeline.negotiate_stage_axis(
-            len(self.stages), ndev)
+        if factorization is not None:
+            # autotune override (plan_mesh): the pipelined path still
+            # requires n_stage == len(stages), so only (1, ndev) or
+            # (len(stages), ndev // len(stages)) are legal here.
+            n_stage, n_worker = factorization
+            if n_stage not in (1, len(self.stages)) \
+                    or n_stage * n_worker > ndev or n_worker < 1:
+                raise LoweringError(
+                    f"factorization {factorization} is not expressible on "
+                    f"{ndev} devices for {len(self.stages)} stages")
+            self.n_stage, self.n_worker = n_stage, n_worker
+        else:
+            self.n_stage, self.n_worker = dpipeline.negotiate_stage_axis(
+                len(self.stages), ndev)
         from .. import compat
         self.mesh = compat.make_mesh((self.n_stage, self.n_worker),
                                      (STAGE_AXIS, WORKER_AXIS))

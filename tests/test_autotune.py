@@ -1,0 +1,358 @@
+"""Self-tuning runtime: profile -> retune -> replay.
+
+The load-bearing guarantee is that :func:`repro.core.retune` is a *pure
+IR rewrite* — whatever the pilot measured, the tuned lowering produces
+exactly the same results as the untuned one, on every backend.  The
+parity tests here pin that for the three rewrites the tuner performs
+(Farm∘Farm merge, a2a right-row absorption, stage fusion + micro-batch)
+and for the one it must refuse (fusing across a Feedback loop).  The
+rest covers the profile artifact (JSON round-trip, diff), the tuning
+models (auto_batch / ring_capacity), the hand-off recalibration path,
+the mesh planning split, and the adaptive out-of-core budget.
+
+Profiles are measured once at module scope (the pilot runs on the
+threads backend, in-process); nodes live in ``_procs_nodes`` so the
+procs backend can ship them to spawned vertices.
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import _procs_nodes as N
+from repro.core import (AllToAll, Farm, Feedback, FnNode, FusedNode, GO_ON,
+                        KeyBatch, LoweringError, MemoryBudget, Pipeline,
+                        Profile, Stage, TunedProgram, auto_batch,
+                        calibrate_handoff_us, clear_handoff_cache, lower,
+                        partition_by, plan_mesh, profile, reduce_by_key,
+                        retune, ring_capacity)
+from repro.core.autotune import StageProfile, _RebatchNode
+
+# -- skeletons + their pilot profiles (measured once; threads, in-process) ---
+FARM2 = Pipeline(Farm(N.f, 3, ordered=True), Farm(N.g, 3, ordered=True))
+FARM2_PROF = profile(FARM2, range(256))
+
+A2A = Pipeline(partition_by(N.mod3, 3), Stage(N.double), Stage(N.f))
+A2A_PROF = profile(A2A, range(256))
+
+# the porting-study failure mode: three cheap stages mis-declared coarse
+PIPE3 = Pipeline(Stage(N.f, grain=10000), Stage(N.g, grain=10000),
+                 Stage(N.sq, grain=10000))
+PIPE3_PROF = profile(PIPE3, range(256))
+
+FB = Pipeline(Stage(N.f), Feedback(N.fb_step, N.fb_pred, nworkers=2,
+                                   max_trips=64), Stage(N.g))
+FB_PROF = profile(FB, range(64))
+
+# retune is deterministic given a profile: rewrite + lower once, reuse
+# across every hypothesis example (procs examples each spawn a network)
+FARM2_TUNED = retune(FARM2, FARM2_PROF)
+A2A_TUNED = retune(A2A, A2A_PROF)
+PIPE3_TUNED = retune(PIPE3, PIPE3_PROF)
+FB_TUNED = retune(FB, FB_PROF)
+
+
+def _prog(skel, backend):
+    # retune already fused with the measured threshold — same opts
+    # TunedProgram._build uses
+    return lower(skel, backend, fuse=False)
+
+
+# -- the profile artifact ----------------------------------------------------
+def test_profile_measures_every_position():
+    assert FARM2_PROF.handoff_us > 0
+    assert FARM2_PROF.pilot_items == 256
+    assert [sp.path for sp in FARM2_PROF.stages] == ["0", "1"]
+    for sp in FARM2_PROF.stages:
+        assert sp.kind == "farm" and sp.width == 3
+        assert sp.items > 0 and sp.service_us > 0 and sp.service_ewma_us > 0
+    # an all-to-all profiles as two rows, in pipeline order
+    assert [sp.path for sp in A2A_PROF.stages] == ["0.left", "0.right",
+                                                   "1", "2"]
+    assert A2A_PROF.stage("0.left").kind == "a2a-left"
+    assert A2A_PROF.stage("0.right").width == 3
+
+
+def test_profile_json_roundtrip(tmp_path):
+    p = tmp_path / "prof.json"
+    FARM2_PROF.save(str(p))
+    back = Profile.load(str(p))
+    assert back.to_json() == FARM2_PROF.to_json()
+    assert back.stage("1").service_us == FARM2_PROF.stage("1").service_us
+    with pytest.raises(ValueError):
+        Profile.from_json({"schema": "bench-rows/1"})
+
+
+def test_profile_diff_reports_position_deltas():
+    other = Profile(handoff_us=FARM2_PROF.handoff_us, pilot_items=256,
+                    stages=[StageProfile(path="0", kind="farm", name="ff-farm",
+                                         service_us=9.0, service_ewma_us=9.0,
+                                         items=10, width=3,
+                                         queue_high_water=5)])
+    d = FARM2_PROF.diff(other)
+    assert d["0"]["service_us"] == (FARM2_PROF.stage("0").service_us, 9.0)
+    assert d["1"]["service_us"][1] is None  # missing on the other side
+
+
+# -- the tuning models -------------------------------------------------------
+def test_auto_batch_thresholds():
+    assert auto_batch(100.0, 3.0) == 1        # hand-off already < 10% of svc
+    assert auto_batch(1.0, 3.0) == 30         # ceil(3 / 0.1)
+    assert auto_batch(0.001, 5.0) == 256      # capped
+    assert auto_batch(5.0, 1.0, frac=0.5) == 1
+
+
+def test_ring_capacity_model():
+    balanced = ring_capacity(1.0, 1.0)
+    assert balanced == 64
+    assert ring_capacity(1.0, 8.0) > balanced      # slow consumer: deeper
+    assert ring_capacity(8.0, 1.0) == 16           # slow producer: floor
+    assert ring_capacity(1.0, 1000.0) == 512       # ratio clamped at 8
+    assert ring_capacity(1.0, 1.0, high_water=300) == 1024  # 2x hw, pow2
+    for cap in (ring_capacity(1.0, c) for c in (0.1, 0.5, 1, 3, 7)):
+        assert 16 <= cap <= 8192 and cap & (cap - 1) == 0
+
+
+def test_rebatch_node_batches_and_flushes():
+    node = _RebatchNode(FnNode(N.double), batch=3)
+    node.svc_init()
+    assert node.svc(1) is GO_ON and node.svc(2) is GO_ON
+    out = node.svc(3)
+    assert isinstance(out, KeyBatch) and list(out) == [2, 4, 6]
+    assert node.svc(4) is GO_ON
+    tail = node.svc_eos()                  # remainder flushed at EOS
+    assert isinstance(tail, KeyBatch) and list(tail) == [8]
+    assert node.svc_eos() is None          # nothing buffered: stay silent
+
+
+def test_rebatch_node_filters_like_unwrapped():
+    node = _RebatchNode(FnNode(N.drop_odd), batch=2)
+    assert node.svc(1) is GO_ON            # filtered, not buffered
+    assert node.svc(3) is GO_ON
+    out = node.svc(2)                      # 2 kept, still below batch
+    assert out is GO_ON
+    assert list(node.svc(4)) == [2, 4]
+
+
+# -- retune structure: what the rewrite does to the IR -----------------------
+def test_retune_merges_farm_farm_into_one():
+    """Two back-to-back stateless sub-threshold farms become ONE farm
+    (half the arbiter crossings), keeping the first farm's stats object
+    so callers polling it keep their handle."""
+    assert isinstance(FARM2_TUNED, Farm)
+    assert FARM2_TUNED.nworkers == 3
+    assert FARM2_TUNED.stats is FARM2.stages[0].stats
+
+
+def test_retune_absorbs_stages_into_a2a():
+    """Stateless post-shuffle stages are absorbed into the a2a right
+    rows (FusedNode per partition) — the shuffle's stats identity is
+    preserved."""
+    assert isinstance(A2A_TUNED, AllToAll)
+    assert all(isinstance(r, FusedNode) for r in A2A_TUNED.right_nodes)
+    assert A2A_TUNED.stats is A2A.stages[0].stats
+
+
+def test_retune_collapses_misgrained_pipeline():
+    """The declared grain=10000 lie is overwritten by the measured
+    sub-µs service times: the chain fuses to a single stage and the
+    survivor is micro-batched (hand-off still dominates µs work)."""
+    assert isinstance(PIPE3_TUNED, Stage)
+    assert isinstance(PIPE3_TUNED.node, _RebatchNode)
+    assert PIPE3_TUNED.node.batch > 1
+
+
+def test_retune_never_fuses_across_feedback():
+    """The wrap-around loop is a barrier: its ring re-enqueues items, so
+    neither neighbour stage may be pulled into (or across) it."""
+    assert isinstance(FB_TUNED, Pipeline)
+    kinds = [type(s) for s in FB_TUNED.stages]
+    assert kinds.count(Feedback) == 1
+    fb = next(s for s in FB_TUNED.stages if isinstance(s, Feedback))
+    assert fb.node is FB.stages[1].node    # loop body untouched
+
+
+def test_retune_mesh_is_identity():
+    """Mesh grain is a microbatch ROW COUNT, not µs — retune must not
+    overwrite it with service times (plan_mesh owns the mesh axis)."""
+    assert retune(FARM2, FARM2_PROF, backend="mesh") is FARM2
+
+
+# -- retune parity: the rewrite never changes results ------------------------
+@given(st.lists(st.integers(-1000, 1000), max_size=40))
+@settings(max_examples=8, deadline=None)
+def test_retune_parity_farm_farm_threads(xs):
+    want = [N.g(N.f(x)) for x in xs]
+    assert _prog(FARM2_TUNED, "threads")(xs) == want
+
+
+@given(st.lists(st.integers(-200, 200), max_size=40))
+@settings(max_examples=8, deadline=None)
+def test_retune_parity_a2a_threads(xs):
+    # unordered shuffle: compare as multisets
+    want = sorted(N.f(N.double(x)) for x in xs)
+    assert sorted(_prog(A2A_TUNED, "threads")(xs)) == want
+
+
+@given(st.lists(st.integers(-1000, 1000), max_size=40))
+@settings(max_examples=8, deadline=None)
+def test_retune_parity_rebatched_pipeline_threads(xs):
+    want = [N.sq(N.g(N.f(x))) for x in xs]
+    assert _prog(PIPE3_TUNED, "threads")(xs) == want
+
+
+@given(st.lists(st.integers(0, 60), max_size=24))
+@settings(max_examples=6, deadline=None)
+def test_retune_parity_feedback_threads(xs):
+    want = [N.g(N.fb_ref(N.f(x))) for x in xs]
+    assert _prog(FB_TUNED, "threads")(xs) == want
+
+
+# Procs parity draws fewer examples: every example spawns a process
+# network (seconds, not µs) — same tuned IR, same reference.
+@given(st.lists(st.integers(-1000, 1000), max_size=12))
+@settings(max_examples=2, deadline=None)
+def test_retune_parity_farm_farm_procs(xs):
+    assert _prog(FARM2_TUNED, "procs")(xs) == [N.g(N.f(x)) for x in xs]
+
+
+@given(st.lists(st.integers(-200, 200), max_size=12))
+@settings(max_examples=2, deadline=None)
+def test_retune_parity_a2a_procs(xs):
+    want = sorted(N.f(N.double(x)) for x in xs)
+    assert sorted(_prog(A2A_TUNED, "procs")(xs)) == want
+
+
+@given(st.lists(st.integers(-1000, 1000), max_size=12))
+@settings(max_examples=2, deadline=None)
+def test_retune_parity_rebatched_pipeline_procs(xs):
+    # the _RebatchNode wrapper must pickle to spawned vertices and its
+    # KeyBatch messages must unpack in the caller-side drain
+    assert _prog(PIPE3_TUNED, "procs")(xs) == [N.sq(N.g(N.f(x))) for x in xs]
+
+
+# -- the two-phase program (lower(..., tune=True)) ---------------------------
+def test_tune_two_phase_threads():
+    tp = lower(PIPE3, "threads", tune=True, tune_pilot=32)
+    assert isinstance(tp, TunedProgram)
+    assert tp.tuned is None                 # no pilot has run yet
+    xs = list(range(100))
+    want = [N.sq(N.g(N.f(x))) for x in xs]
+    assert tp(xs) == want                   # pilot head + tuned remainder
+    assert tp.profile is not None and tp.profile.pilot_items == 32
+    assert isinstance(tp.tuned_skeleton, Stage)
+    assert tp(xs) == want                   # second call: straight to tuned
+
+
+def test_tune_two_phase_procs():
+    tp = lower(FARM2, "procs", tune=True, tune_pilot=32)
+    xs = list(range(64))
+    assert tp(xs) == [N.g(N.f(x)) for x in xs]
+    assert tp.tuned is not None and tp.tuned.backend == "procs"
+
+
+def test_tune_pilot_covers_whole_stream():
+    tp = lower(PIPE3, "threads", tune=True, tune_pilot=512)
+    xs = list(range(40))                    # shorter than the pilot
+    assert tp(xs) == [N.sq(N.g(N.f(x))) for x in xs]
+    assert tp.profile.pilot_items == 40
+
+
+def test_saved_profile_skips_pilot(tmp_path):
+    p = tmp_path / "pipe3.json"
+    PIPE3_PROF.save(str(p))
+    tp = lower(PIPE3, "threads", profile=str(p))
+    assert tp.tuned is not None             # built before any call
+    xs = list(range(50))
+    assert tp(xs) == [N.sq(N.g(N.f(x))) for x in xs]
+
+
+# -- mesh planning -----------------------------------------------------------
+def test_tune_two_phase_mesh():
+    """tune=True on the mesh backend: pilot on threads, then plan_mesh
+    picks the factorization and the skeleton lowers whole — parity with
+    the host reference on exact ints."""
+    tp = lower(FARM2, "mesh", tune=True, tune_pilot=32)
+    xs = list(range(64))
+    assert tp(xs) == [N.g(N.f(x)) for x in xs]
+    assert tp.tuned_skeleton is tp.skeleton  # mesh tunes options, not IR
+
+
+def test_plan_mesh_factorization_and_a2a_guard():
+    plan = plan_mesh(PIPE3_PROF, PIPE3, devices=1)
+    assert plan["factorization"] == (1, 1)
+    # the a2a mesh program has no stage axis to factor
+    assert plan_mesh(A2A_PROF, A2A, devices=4) == {}
+
+
+def test_best_factorization_model():
+    from repro.core.dpipeline import best_factorization
+    assert best_factorization(3, 4) == (1, 4)        # not divisible: seq
+    assert best_factorization(1, 8) == (1, 8)
+    # a skewed chain pipelines at its slowest stage: seq wins the model
+    assert best_factorization(2, 4, stage_costs=[5.0, 1.0]) == (1, 4)
+
+
+def test_mesh_factorization_validation():
+    with pytest.raises(LoweringError):
+        lower(FARM2, "mesh", devices=4, factorization=(3, 1))  # 3 stages? no
+    with pytest.raises(LoweringError):
+        lower(FARM2, "mesh", devices=4, factorization=(2, 3))  # 6 > 4 devs
+
+
+# -- hand-off calibration cache (the recalibrate bugfix) ---------------------
+def test_handoff_recalibrate_and_cache_clear():
+    from repro.core import sched
+    clear_handoff_cache()
+    assert sched._HANDOFF_CACHE is None
+    v1 = calibrate_handoff_us(ntasks=128, repeats=1)
+    assert v1 > 0 and sched._HANDOFF_CACHE == v1
+    # cached: different args, same answer (no re-measure)
+    assert calibrate_handoff_us(ntasks=4, repeats=1) == v1
+    # recalibrate=True re-measures and replaces the cache
+    v2 = calibrate_handoff_us(ntasks=128, repeats=1, recalibrate=True)
+    assert v2 > 0 and sched._HANDOFF_CACHE == v2
+
+
+# -- adaptive out-of-core budget ---------------------------------------------
+def test_adaptive_budget_grow_shrink_hold():
+    b = MemoryBudget(1024, adaptive=True)
+    assert (b.min_limit, b.max_limit) == (128, 8192)
+    assert b.adapt() == 2048               # clean run: grow
+    b.spilled(0, 100)
+    assert b.adapt() == 2048               # spills only: regime works, hold
+    b.stalled()
+    assert b.adapt() == 1024               # stalls: shrink
+    for _ in range(10):
+        b.stalled()
+        b.adapt()
+    assert b.limit == b.min_limit          # clamped at the floor
+    for _ in range(10):
+        b.adapt()
+    assert b.limit == b.max_limit          # clean runs: clamped at the cap
+
+
+def test_adaptive_budget_counts_deltas_not_totals():
+    """adapt() reacts to THIS run's telemetry: old spills must not keep
+    counting against future runs."""
+    b = MemoryBudget(1024, adaptive=True)
+    b.spilled(0, 10)
+    b.stalled()
+    assert b.adapt() == 512                # this run stalled
+    assert b.adapt() == 1024               # next run clean: grow again
+
+
+def test_adaptive_budget_resizes_after_run():
+    """The fold_into finalizer drives adapt(): a comfortably-budgeted
+    reduction run ends with the limit doubled (headroom observed)."""
+    budget = MemoryBudget(1 << 20, adaptive=True)
+    skel = reduce_by_key(N.mod3, "sum", nright=2, budget=budget)
+    out = dict(lower(skel, "threads")(range(30)))
+    assert out == {k: sum(x for x in range(30) if x % 3 == k)
+                   for k in range(3)}
+    assert budget.limit == 2 << 20
+
+
+def test_non_adaptive_budget_never_resizes():
+    budget = MemoryBudget(1 << 20)         # adaptive defaults off
+    skel = reduce_by_key(N.mod3, "sum", nright=2, budget=budget)
+    lower(skel, "threads")(range(30))
+    assert budget.limit == 1 << 20

@@ -55,6 +55,26 @@ def test_oocore_stays_jax_free():
         "assert 'jax' not in sys.modules, 'oocore imported jax'")
 
 
+def test_autotune_stays_jax_free():
+    """The self-tuning loop is host-side: profiling a pilot, retuning the
+    IR, and replaying on threads must never load jax (plan_mesh is the
+    only device-aware entry point and imports it lazily)."""
+    _run_isolated(
+        "import sys\n"
+        "from repro.core import (Pipeline, Stage, TunedProgram, lower, "
+        "profile, retune)\n"
+        "import repro.core.autotune\n"
+        "def f(x): return x + 1\n"
+        "def g(x): return x * 2\n"
+        "skel = Pipeline(Stage(f, grain=10000), Stage(g, grain=10000))\n"
+        "prof = profile(skel, range(64))\n"
+        "tuned = lower(retune(skel, prof), 'threads', fuse=False)\n"
+        "assert tuned(range(10)) == [(x + 1) * 2 for x in range(10)]\n"
+        "tp = lower(skel, 'threads', tune=True, tune_pilot=16)\n"
+        "assert tp(range(40)) == [(x + 1) * 2 for x in range(40)]\n"
+        "assert 'jax' not in sys.modules, 'autotune imported jax'")
+
+
 def test_ir_construction_stays_jax_free():
     """Building and thread-lowering a keyed reduction — the exact work a
     spawned vertex's unpickle path does — must not touch jax either."""
