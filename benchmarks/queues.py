@@ -35,6 +35,20 @@ Two further row families cost out the zero-copy data plane:
 * ``queue_xproc_batched`` — small ints via ``push_many`` (batch frames)
   vs the one-slot-per-item ``queue_xproc_shm`` row: the per-item ring
   protocol cost amortised across a packed slot.
+
+The ``queue_trace_{off,sampled}`` rows cost out the observability
+layer's claim that it may not disturb what it measures: one vertex's
+per-item cycle (ingress ring op, ``FnNode.svc`` call, egress ring op —
+the code shape ``WorkerVertex._loop`` runs) with the svc trace bracket
+compiled in, as ``tracer=None`` (the tracing-off hot path: two
+attribute checks per item) and as a 1-in-16 sampled ``VertexTracer``.
+The single-threaded cycle is the comparison substrate *because* it is
+near-deterministic — the 2-thread stream's scheduler noise (±10%)
+would swamp the ~2% effect being bounded — and the estimator is the
+median over paired adjacent measurements, so clock drift shared by
+both arms cancels in each ratio.  The off path is ASSERTED within 5%
+of the plain cycle, so a hot-path regression in ``repro.core.obs``
+fails the bench run, not just a dashboard.
 """
 from __future__ import annotations
 
@@ -43,11 +57,13 @@ import threading
 import time
 
 from repro.core import EOS, LockQueue, ShmRing, SPSCQueue
+from repro.core.obs import VertexTracer
 
 N = 200_000
 N_XPROC = 20_000
 N_PAYLOAD = 2_000
-PAYLOAD_BYTES = 16_384
+N_TRACE = 10_000  # items per trace-overhead round: NOT CI-shrunk — the
+PAYLOAD_BYTES = 16_384  # 5% assertion needs its fixed many-short-rounds shape
 
 
 def _ops_per_sec_single(qcls) -> float:
@@ -82,6 +98,66 @@ def _stream_us_per_item(qcls, n=100_000) -> float:
     dt = time.perf_counter() - t0
     assert done[0] == n
     return dt / n * 1e6
+
+
+def _vertex_cycle_us(tracer, n, traced=True) -> float:
+    """One timed pass of the per-item vertex cycle: ingress ring op,
+    ``FnNode.svc`` call, egress ring op — with (``traced=True``) or
+    without the svc trace bracket.  ``tracer=None`` under the bracket
+    is the tracing-off hot path every vertex pays; a sampled
+    :class:`VertexTracer` the 1-in-N path.  The lane is reset after
+    the pass so buffer dynamics stay identical across repeats."""
+    from repro.core.skeleton import FnNode
+    qin, qout = SPSCQueue(1024), SPSCQueue(1024)
+    svc = FnNode(lambda x: x + 1).svc
+    tr = tracer
+    t0 = time.perf_counter()
+    if traced:
+        for i in range(n):
+            qin.push(i)
+            item = qin.pop()
+            tb = tr.begin() if tr is not None else 0.0
+            out = svc(item)
+            if tr is not None:
+                tr.end(tb, "svc")
+            qout.push(out)
+            qout.pop()
+    else:
+        for i in range(n):
+            qin.push(i)
+            item = qin.pop()
+            out = svc(item)
+            qout.push(out)
+            qout.pop()
+    dt = time.perf_counter() - t0
+    if tr is not None:
+        tr.events.clear()
+        tr.dropped = 0
+    return dt / n * 1e6
+
+
+def _trace_overhead(n, pairs=75):
+    """Paired-ratio estimate of the trace bracket's cost: each round
+    measures plain / off / sampled back to back (shared drift cancels
+    in the per-round ratio), the estimator is the median round — many
+    SHORT rounds, so a scheduler spike lands in a few rounds the median
+    ignores instead of smearing over one long measurement (on a shared
+    single-core VM this is the difference between ±0.5% and ±4% on the
+    estimate).  Returns ``(off_us, sampled_us, off_ratio,
+    sampled_ratio)``."""
+    import statistics
+    tr = VertexTracer("bench-vertex", sample=16, capacity=4096)
+    offs, sampleds, off_r, smp_r = [], [], [], []
+    for _ in range(pairs):
+        p = _vertex_cycle_us(None, n, traced=False)
+        o = _vertex_cycle_us(None, n, traced=True)
+        s = _vertex_cycle_us(tr, n, traced=True)
+        offs.append(o)
+        sampleds.append(s)
+        off_r.append(o / p)
+        smp_r.append(s / p)
+    return (statistics.median(offs), statistics.median(sampleds),
+            statistics.median(off_r), statistics.median(smp_r))
 
 
 # -- cross-process hand-off (the procs backend's edge primitive) -------------
@@ -266,6 +342,14 @@ def run(emit):
     lock_us = _stream_us_per_item(LockQueue)
     emit("queue_stream_spsc", spsc_us, f"lock_over_spsc={lock_us/spsc_us:.2f}x")
     emit("queue_stream_lock", lock_us, "")
+    off_us, sampled_us, off_ratio, sampled_ratio = _trace_overhead(N_TRACE)
+    emit("queue_trace_off", off_us,
+         f"off_over_plain={off_ratio:.3f}x")
+    emit("queue_trace_sampled", sampled_us,
+         f"sampled_over_plain={sampled_ratio:.2f}x")
+    assert off_ratio <= 1.05, (
+        f"tracing-off hot path costs {(off_ratio - 1) * 100:.1f}% on a "
+        f"vertex cycle (budget: 5%) — repro.core.obs regressed")
     shm_us = _xproc_us_per_item("shm")
     mpq_us = _xproc_us_per_item("mpq")
     emit("queue_xproc_shm", shm_us,

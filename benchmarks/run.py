@@ -21,15 +21,18 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement):
   roofline.py         — EXPERIMENTS §Roofline terms from the dry-run artifacts
 
 ``--json PATH`` additionally writes the rows machine-readable (schema:
-``{"schema": "bench-rows/1", "results": {benchmark: [{"config",
-"us_per_item", "derived"}]}}``) so the perf trajectory is recorded run
-over run — CI uploads ``BENCH_results.json`` as an artifact.  ``--only
-a,b`` restricts the run to the named modules (smoke configs stay the
-caller's job: set module attributes before calling :func:`main`).
+``{"schema": "bench-rows/2", "meta": {host, cpus, python, jax, run_id},
+"results": {benchmark: [{"config", "us_per_item", "derived"}]}}``) so
+the perf trajectory is recorded run over run — CI uploads
+``BENCH_results.json`` as an artifact.  The ``meta`` block stamps where
+a number came from (bench-rows/1 files lack it; the baseline gate reads
+both).  ``--only a,b`` restricts the run to the named modules (smoke
+configs stay the caller's job: set module attributes before calling
+:func:`main`).
 
 ``--check-baseline PATH`` is the perf-regression gate: after the run,
 every (benchmark, config) row present in both the fresh results and the
-committed baseline JSON (same bench-rows/1 schema) is compared on
+committed baseline JSON (bench-rows/1 or /2 schema) is compared on
 ``us_per_item``, and the process exits non-zero if any row got slower
 than ``baseline × (1 + tolerance)`` (``--tolerance``, default 0.35 —
 generous because CI machines are noisy and smoke tiers are small).
@@ -69,6 +72,27 @@ MODULES = ("queues", "farm_overhead", "farm_composition", "skeleton_parity",
 
 def _emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def run_meta() -> dict:
+    """The bench-rows/2 provenance block: enough to tell two uploaded
+    artifacts apart (which host, how many cores, which toolchain) and a
+    monotonic run id to order same-host runs."""
+    import os
+    import platform
+
+    meta = {
+        "host": platform.node(),
+        "cpus": os.cpu_count(),
+        "python": platform.python_version(),
+        "run_id": f"{time.time_ns():x}",
+    }
+    try:
+        from importlib import metadata as _ilmd
+        meta["jax"] = _ilmd.version("jax")
+    except Exception:          # jax absent: the host-only rows still record
+        meta["jax"] = None
+    return meta
 
 
 def main(argv: Optional[List[str]] = None) -> None:
@@ -119,8 +143,8 @@ def main(argv: Optional[List[str]] = None) -> None:
             results.setdefault(bench, []).append(
                 {"config": config, "us_per_item": us, "derived": derived})
         with open(args.json, "w") as f:
-            json.dump({"schema": "bench-rows/1", "results": results}, f,
-                      indent=2, sort_keys=True)
+            json.dump({"schema": "bench-rows/2", "meta": run_meta(),
+                       "results": results}, f, indent=2, sort_keys=True)
         print(f"# wrote {sum(map(len, results.values()))} rows "
               f"from {len(results)} benchmarks to {args.json}", flush=True)
 
@@ -134,8 +158,8 @@ def check_baseline(rows: List[Tuple[str, str, float, str]], path: str,
     with the baseline regressed past ``baseline × (1 + tolerance)``."""
     with open(path) as f:
         base = json.load(f)
-    if base.get("schema") != "bench-rows/1":
-        raise SystemExit(f"baseline {path} is not bench-rows/1 "
+    if base.get("schema") not in ("bench-rows/1", "bench-rows/2"):
+        raise SystemExit(f"baseline {path} is not bench-rows/1 or /2 "
                          f"(schema={base.get('schema')!r})")
     baseline = {(bench, r["config"]): float(r["us_per_item"])
                 for bench, rs in base.get("results", {}).items()

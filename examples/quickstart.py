@@ -171,6 +171,32 @@ def main():
     tp = lower(misgrained, "threads", tune=True, tune_pilot=64)
     assert tp(range(200)) == [_sq(_inc(x)) for x in range(200)]
 
+    # -- 1h. observability: trace a run, read the RunReport ------------------
+    # trace= hands every vertex a sampled, bounded event buffer (svc
+    # spans, push-wait stalls, steals, spills, EOS markers) and metrics=
+    # folds the farm boards, queue high-water marks and pool stats into
+    # one RunReport; both knobs work on all three backends, and with
+    # them OFF a vertex carries ``tracer = None`` and never enters
+    # repro.core.obs at all.  The export is Chrome trace-event JSON —
+    # drop the file on https://ui.perfetto.dev (or chrome://tracing) to
+    # see one swim-lane per vertex.
+    import os
+    import tempfile
+    traced = lower(skel, "threads", trace=True, metrics=True)
+    assert traced(range(10)) == on_threads
+    trace_path = os.path.join(tempfile.gettempdir(), "ff_quickstart.json")
+    doc = traced.last_trace.to_chrome_json(trace_path)
+    print(f"trace: {len(traced.last_trace.lanes)} lanes, "
+          f"{len(doc['traceEvents'])} events -> {trace_path}")
+    rep = traced.last_report                 # JSON-able: rep.save(path)
+    farm = rep.farms["ff-farm@0"]            # telemetry keys by IR path
+    print(f"report: farm@0 collected={farm['tasks_collected']}, "
+          f"queue high-water={max(rep.queues.values())}, "
+          f"wall={rep.meta['wall_s'] * 1e3:.1f}ms")
+    # the report round-trips into §1g's tuning loop: to_profile() turns
+    # live telemetry back into a Profile for retune()/Profile.diff.
+    assert any(s.kind == "farm" for s in rep.to_profile().stages)
+
     # -- 2. the paper's app: SW database search (host-only payloads) ---------
     rng = np.random.default_rng(0)
     query = jnp.asarray(rng.integers(0, 20, 32), jnp.int32)

@@ -18,11 +18,13 @@ from .sched import (SCHEDULERS, BudgetBackpressure, CostModel, KeyAffinity,
                     OnDemand, RoundRobin, Scheduler, WorkStealing,
                     calibrate_handoff_us, clear_handoff_cache, make_scheduler,
                     spread_cpus)
+from .obs import (Histogram, MetricsRegistry, RunReport, Trace, Tracer,
+                  VertexTracer)
 from .skeleton import (GO_ON, AllToAll, EmitMany, Farm, FarmStats, Feedback,
                        FnNode, FusedNode, KeyBatch,
                        LatencyReservoir, LoweringError, MeshProgram, Pipeline,
                        Skeleton, Source, Stage, ThreadProgram, as_skeleton,
-                       compose, ff_node, fuse, lower)
+                       compose, ff_node, fuse, lower, walk_stats)
 from .graph import Accelerator, Graph, Net, Token, build
 from .procgraph import (ProcAccelerator, ProcGraph, ProcProgram,
                         pool_shutdown, pool_stats)
@@ -70,6 +72,8 @@ __all__ = [
     "FarmStats", "LatencyReservoir", "FnNode", "TaskFarm", "ff_node",
     "PagePool", "PoolExhausted",
     "MDFExecutor", "MDFTask",
+    "Tracer", "VertexTracer", "Trace", "MetricsRegistry", "Histogram",
+    "RunReport", "walk_stats",
 ] + sorted(_LAZY)
 
 

@@ -39,6 +39,7 @@ interpreter-salted builtin ``hash``.
 from __future__ import annotations
 
 import math
+import time
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -46,7 +47,8 @@ from . import graph as _graph
 from . import procgraph as _procgraph
 from .skeleton import (GO_ON, AllToAll, EmitMany, FnNode, KeyBatch,
                        LoweringError, Pipeline, Skeleton, Stage, WORKER_AXIS,
-                       _ReorderNode, _jax_callable, ff_node)
+                       _ReorderNode, _coerce_metrics, _coerce_tracer,
+                       _jax_callable, ff_node)
 
 __all__ = [
     "stable_hash", "KeyRouter", "build_thread_a2a", "build_proc_a2a",
@@ -265,7 +267,7 @@ def _scatter_node(skel: AllToAll) -> ff_node:
 
 
 def build_thread_a2a(skel: AllToAll, g: "_graph.Graph", in_rings: List[Any],
-                     terminal: bool) -> Optional[Any]:
+                     terminal: bool, path: str = "") -> Optional[Any]:
     """Wire an :class:`AllToAll` into the thread graph.
 
     Topology: ``[scatter] → N left → (N×M rings) → M right → [reorder]``.
@@ -273,7 +275,8 @@ def build_thread_a2a(skel: AllToAll, g: "_graph.Graph", in_rings: List[Any],
     the left nodes run as sources); the reorder stage only under
     ``ordered=``.  Returns the outbound ring list — one ring per right
     vertex (the downstream vertex fan-in-merges them), or a single ring
-    after a reorder stage."""
+    after a reorder stage.  Every vertex carries ``path`` (the a2a's IR
+    position) so telemetry lanes key collision-free."""
     qc = skel.queue_class or g.queue_class
     cap = skel.capacity or g.capacity
     lnodes, rnodes = _wrap_rows(skel)
@@ -286,6 +289,7 @@ def build_thread_a2a(skel: AllToAll, g: "_graph.Graph", in_rings: List[Any],
         scatter = g.add(_graph.StageVertex(
             _scatter_node(skel), route=skel.scheduling,
             name=f"{skel.name}-scatter"))
+        scatter.path = path
         scatter.ins.extend(in_rings)
     elif skel.ordered:
         raise LoweringError(
@@ -299,11 +303,15 @@ def build_thread_a2a(skel: AllToAll, g: "_graph.Graph", in_rings: List[Any],
         lv = g.add(A2ALeftVertex(
             node, KeyRouter(skel.by, skel.nright, tagged=skel.ordered),
             name=f"{skel.name}-L{i}"))
+        lv.path = path
         if scatter is not None:
             g.connect(scatter, lv, capacity=cap, queue_class=qc)
         lefts.append(lv)
-    rights = [g.add(_graph.StageVertex(n, name=f"{skel.name}-R{j}"))
-              for j, n in enumerate(rnodes)]
+    rights = []
+    for j, n in enumerate(rnodes):
+        rv = g.add(_graph.StageVertex(n, name=f"{skel.name}-R{j}"))
+        rv.path = path
+        rights.append(rv)
     for lv in lefts:           # the N×M edge matrix
         for rv in rights:
             g.connect(lv, rv, capacity=cap, queue_class=qc)
@@ -311,6 +319,7 @@ def build_thread_a2a(skel: AllToAll, g: "_graph.Graph", in_rings: List[Any],
     if skel.ordered:
         tail = g.add(_graph.StageVertex(_ReorderNode(),
                                         name=f"{skel.name}-reorder"))
+        tail.path = path
         for rv in rights:
             g.connect(rv, tail, capacity=cap, queue_class=qc)
         tails = [tail]
@@ -381,7 +390,8 @@ class A2AProcLeftVertex(_procgraph.ProcStageVertex):
 
 
 def build_proc_a2a(skel: AllToAll, g: "_procgraph.ProcGraph",
-                   in_rings: List[Any], terminal: bool) -> Optional[Any]:
+                   in_rings: List[Any], terminal: bool,
+                   path: str = "") -> Optional[Any]:
     """The procs twin of :func:`build_thread_a2a`: one spawned process per
     vertex, every edge a shared-memory SPSC ring.  A terminal all-to-all
     gets one results ring per sink vertex (each single-producer; the
@@ -404,6 +414,7 @@ def build_proc_a2a(skel: AllToAll, g: "_procgraph.ProcGraph",
         scatter = g.add(A2AProcScatterVertex(
             _scatter_node(skel), skel.scheduling,
             name=f"{skel.name}-scatter"))
+        scatter.path = path
         scatter.ins.extend(in_rings)
     elif skel.ordered:
         raise LoweringError(
@@ -417,11 +428,15 @@ def build_proc_a2a(skel: AllToAll, g: "_procgraph.ProcGraph",
         lv = g.add(A2AProcLeftVertex(
             node, KeyRouter(skel.by, skel.nright, tagged=skel.ordered),
             name=f"{skel.name}-L{i}"))
+        lv.path = path
         if scatter is not None:
             g.connect(scatter, lv, capacity=cap)
         lefts.append(lv)
-    rights = [g.add(_procgraph.ProcStageVertex(n, name=f"{skel.name}-R{j}"))
-              for j, n in enumerate(rnodes)]
+    rights = []
+    for j, n in enumerate(rnodes):
+        rv = g.add(_procgraph.ProcStageVertex(n, name=f"{skel.name}-R{j}"))
+        rv.path = path
+        rights.append(rv)
     for lv in lefts:           # the N×M edge matrix
         for rv in rights:
             g.connect(lv, rv, capacity=cap)
@@ -429,6 +444,7 @@ def build_proc_a2a(skel: AllToAll, g: "_procgraph.ProcGraph",
     if skel.ordered:
         tail = g.add(_procgraph.ProcStageVertex(
             _ReorderNode(), name=f"{skel.name}-reorder"))
+        tail.path = path
         for rv in rights:
             g.connect(rv, tail, capacity=cap)
         tails = [tail]
@@ -515,7 +531,8 @@ class A2AMeshProgram:
 
     def __init__(self, skeleton: Skeleton, *, devices: Optional[int] = None,
                  block: int = 64, check_vma: Optional[bool] = None,
-                 capacity: Optional[int] = None, grain: Optional[int] = None):
+                 capacity: Optional[int] = None, grain: Optional[int] = None,
+                 trace: Any = False, metrics: Any = False):
         import jax
 
         self.skeleton = skeleton
@@ -540,6 +557,16 @@ class A2AMeshProgram:
         from .. import compat
         self.mesh = compat.make_mesh((self.n_worker,), (WORKER_AXIS,))
         self._programs: Dict[Tuple[int, str], Callable] = {}
+        self.tracer = _coerce_tracer(trace)
+        self.metrics = _coerce_metrics(metrics)
+        self.last_trace = None
+        self.last_report = None
+        self._lane = None
+        if self.tracer is not None:
+            self._lane = self.tracer.vertex("mesh-program")
+            self._lane.instant("devices", {
+                "devices": self.n_worker, "n_stage": 1,
+                "n_worker": self.n_worker})
 
     def _bucket_rows(self, n: int) -> int:
         rows = max(-(-n // self.n_worker), 1, self.block)
@@ -589,7 +616,22 @@ class A2AMeshProgram:
         padded = np.zeros((self.n_worker * rows, 2), arr.dtype)
         padded[:n, 0] = arr
         padded[:n, 1] = 1  # validity flag: padding rows never reduce
-        acc, cnt = self._program(rows, str(arr.dtype))(padded)
+        prog = self._program(rows, str(arr.dtype))
+        t0 = time.monotonic()
+        acc, cnt = prog(padded)
+        t1 = time.monotonic()
+        if self._lane is not None:
+            self._lane.span("call", t0, t1, {"items": n, "rows": rows})
+            self.last_trace = self.tracer.trace()
+        if self.metrics is not None:
+            reg = self.metrics
+            reg.counter("mesh.calls").inc()
+            reg.counter("mesh.items").inc(n)
+            reg.gauge("mesh.devices").set(self.n_worker)
+            reg.histogram("mesh.call_us").observe((t1 - t0) * 1e6)
+            self.last_report = reg.finalize(reg.report(meta={
+                "backend": "mesh", "items_in": n, "rows": rows,
+                "wall_s": t1 - t0}))
         acc = np.asarray(acc)[0]
         cnt = np.asarray(cnt)[0]
         return [(int(k), acc[k].item()) for k in range(self.nkeys)
@@ -599,6 +641,7 @@ class A2AMeshProgram:
         key = (rows, dtype)
         if key in self._programs:
             return self._programs[key]
+        t_compile = time.monotonic()
 
         import jax
         import jax.numpy as jnp
@@ -654,5 +697,10 @@ class A2AMeshProgram:
             body, mesh=self.mesh, in_specs=(P(WORKER_AXIS),),
             out_specs=(P(WORKER_AXIS), P(WORKER_AXIS)),
             check_vma=self.check_vma))
+        if self._lane is not None:
+            self._lane.span("compile", t_compile, time.monotonic(),
+                            {"rows": rows, "dtype": dtype})
+        if self.metrics is not None:
+            self.metrics.counter("mesh.compiles").inc()
         self._programs[key] = fn
         return fn

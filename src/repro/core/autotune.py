@@ -230,12 +230,12 @@ def _instrument(skel: Skeleton, accs: Dict[str, Any]):
         if isinstance(s, Source):
             acc = _StageAcc()
             accs[p] = ("source", s.name, 1, acc)
-            out.append(Source(_TimedNode(s.node, acc), name=f"{s.name}@{p}",
+            out.append(Source(_TimedNode(s.node, acc), name=s.name,
                               grain=s.grain, capacity=s.capacity))
         elif isinstance(s, Stage):
             acc = _StageAcc()
             accs[p] = ("stage", s.name, 1, acc)
-            out.append(Stage(_TimedNode(s.node, acc), name=f"{s.name}@{p}",
+            out.append(Stage(_TimedNode(s.node, acc), name=s.name,
                              grain=s.grain, capacity=s.capacity))
         elif isinstance(s, Farm):
             acc = _StageAcc()
@@ -257,7 +257,7 @@ def _instrument(skel: Skeleton, accs: Dict[str, Any]):
                 _wrap_row(s.left_nodes, la), _wrap_row(s.right_nodes, ra),
                 by=s.by, nleft=s.nleft, nright=s.nright, ordered=s.ordered,
                 scheduling=s.scheduling, reduce=s.reduce, grain=s.grain,
-                name=f"{s.name}@{p}", queue_class=s.queue_class,
+                name=s.name, queue_class=s.queue_class,
                 capacity=s.capacity))
         elif isinstance(s, Feedback):
             acc = _StageAcc()
@@ -265,7 +265,7 @@ def _instrument(skel: Skeleton, accs: Dict[str, Any]):
             out.append(Feedback(_TimedNode(s.node, acc), s.loop_while,
                                 nworkers=s.nworkers, max_trips=s.max_trips,
                                 scheduling=s.scheduling, grain=s.grain,
-                                name=f"{s.name}@{p}"))
+                                name=s.name))
         else:
             out.append(s)          # unknown composite: run untimed
     return Pipeline(*out) if len(out) > 1 else out[0]

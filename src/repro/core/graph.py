@@ -69,6 +69,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
 
+from .obs import qualname as _qualname
 from .sched import Scheduler, make_scheduler
 from .skeleton import (GO_ON, AllToAll, EmitMany, Farm, FarmStats, Feedback,
                        FnNode, KeyBatch, Pipeline, Skeleton, Source, Stage,
@@ -130,6 +131,14 @@ class _Aborted(Exception):
 class Vertex:
     """A network vertex: one thread, private SPSC endpoints."""
 
+    # observability (obs.py): ``tracer`` is bound by ``Graph.run()`` when a
+    # Tracer is installed, ``path`` is the vertex's IR path assigned by
+    # ``build()``.  Class-level defaults keep the untraced hot path at one
+    # attribute read that resolves against the class dict — no per-vertex
+    # storage, no allocation, when tracing is off.
+    tracer = None
+    path = ""
+
     def __init__(self, node: Optional[ff_node] = None, *, name: str = "ff-vertex"):
         self.node = node
         self.name = name
@@ -142,8 +151,16 @@ class Vertex:
 
     # -- lifecycle (runs in the vertex's own thread) ------------------------
     def _run(self) -> None:
+        tr = self.tracer
+        t_birth = time.monotonic() if tr is not None else 0.0
         try:
             if self.node is not None:
+                if tr is not None and getattr(self.node, "wants_tracer",
+                                              False):
+                    # opt-in node-level events (SpillFold's spill instants):
+                    # the node records into ITS vertex's lane, so the
+                    # single-writer-per-buffer discipline holds
+                    self.node.tracer = tr
                 self.node.svc_init()
             self._loop()
         except _Aborted:
@@ -158,6 +175,9 @@ class Vertex:
                     self.node.svc_end()
                 except BaseException as e:  # pragma: no cover - defensive
                     self.graph.failed.append(e)
+            if tr is not None:
+                tr.instant("eos")
+                tr.span("life", t_birth, time.monotonic())
 
     def _on_error(self, e: BaseException) -> None:
         self.graph.failed.append(e)
@@ -231,9 +251,15 @@ class StageVertex(Vertex):
     def _loop(self) -> None:
         if self._sched is not None:
             self._sched.bind(self.outs, None)
+        tr = self.tracer
         if not self.ins:  # source
             while True:
-                out = self.node.svc(None)
+                if tr is not None:
+                    t0 = tr.begin()
+                    out = self.node.svc(None)
+                    tr.end(t0, "svc")
+                else:
+                    out = self.node.svc(None)
                 if out is None or out is EOS:
                     break
                 if out is GO_ON:
@@ -258,12 +284,22 @@ class StageVertex(Vertex):
                     # batched wire format: unpack here so the node still
                     # sees items (batching is transport, not semantics)
                     for x in item:
-                        out = self.node.svc(x)
+                        if tr is not None:
+                            t0 = tr.begin()
+                            out = self.node.svc(x)
+                            tr.end(t0, "svc")
+                        else:
+                            out = self.node.svc(x)
                         if out is None or out is GO_ON:
                             continue
                         self._emit(out)
                     continue
-                out = self.node.svc(item)
+                if tr is not None:
+                    t0 = tr.begin()
+                    out = self.node.svc(item)
+                    tr.end(t0, "svc")
+                else:
+                    out = self.node.svc(item)
                 if out is None or out is GO_ON:
                     continue  # filtered
                 self._emit(out)
@@ -348,6 +384,10 @@ class DispatchVertex(Vertex):
         arbiter blocked on the wrap-around ring, and this arbiter blocked
         here — draining into the local stash breaks the wait cycle.  Gives
         up once the graph has failed (the ring's worker may be dead)."""
+        if q.push(tok):
+            return  # fast path: no stall, no clock read
+        tr = self.tracer
+        t0 = time.monotonic() if tr is not None else 0.0
         spins = 0
         while not q.push(tok):
             if self.graph.failed:
@@ -360,6 +400,8 @@ class DispatchVertex(Vertex):
             spins += 1
             if spins > 64:
                 time.sleep(_POLL)
+        if tr is not None:
+            tr.span("stall", t0, time.monotonic())
 
     def _dispatch(self, task: Any) -> None:
         ts = self.tags
@@ -376,6 +418,8 @@ class DispatchVertex(Vertex):
         # as _push_with_loop_drain)
         hw = self.sched.high_water
         if hw is not None and self.sched.pending() > hw:
+            tr = self.tracer
+            t0 = time.monotonic() if tr is not None else 0.0
             spins = 0
             while self.sched.pending() > hw:
                 if self.sched.pump():
@@ -390,6 +434,8 @@ class DispatchVertex(Vertex):
                 spins += 1
                 if spins > 64:
                     time.sleep(_POLL)
+            if tr is not None:
+                tr.span("stall", t0, time.monotonic())
 
     def _emit_to(self, widx: int, tok: Token) -> None:
         """Blocking-push callback handed to ``Scheduler.place`` (policies
@@ -419,11 +465,18 @@ class DispatchVertex(Vertex):
     def _loop(self) -> None:
         ts = self.tags
         self.sched.bind(self.outs, ts.stats)
+        tr = self.tracer
+        steals0 = ts.stats.steals if tr is not None else 0
         ndisp = 0
         if self.node is not None and not self.ins:
             # source mode: the emitter node generates the stream
             while True:
-                task = self.node.svc(None)
+                if tr is not None:
+                    t0 = tr.begin()
+                    task = self.node.svc(None)
+                    tr.end(t0, "svc")
+                else:
+                    task = self.node.svc(None)
                 if task is None or task is EOS:
                     break
                 if task is GO_ON:
@@ -431,6 +484,10 @@ class DispatchVertex(Vertex):
                 self._dispatch(task)
                 ndisp += 1
                 self.sched.pump()  # flush/steal while we generate
+                if tr is not None and ts.stats.steals != steals0:
+                    tr.instant("steal",
+                               {"count": ts.stats.steals - steals0})
+                    steals0 = ts.stats.steals
                 # keep the wrap-around ring moving while we generate
                 if self.loop_ring is not None:
                     while True:
@@ -439,6 +496,8 @@ class DispatchVertex(Vertex):
                             break
                         self._dispatch(item)
                         ndisp += 1
+                        if tr is not None:
+                            tr.tick("loop")
                 if self.speculative and ndisp % 32 == 0:
                     self._respeculate()
             # source exhausted; drain the loop to quiescence
@@ -453,6 +512,8 @@ class DispatchVertex(Vertex):
                         break
                     progress = True
                     self._dispatch(item)
+                    if tr is not None:
+                        tr.tick("loop")
                 if not self._stash and not self.sched.pending() \
                         and ts.entered == ts.retired \
                         and self.loop_ring.empty():
@@ -474,6 +535,10 @@ class DispatchVertex(Vertex):
             spec_mark = 0  # dispatches at the last speculation sweep
             while True:
                 progress = self.sched.pump()
+                if tr is not None and ts.stats.steals != steals0:
+                    tr.instant("steal",
+                               {"count": ts.stats.steals - steals0})
+                    steals0 = ts.stats.steals
                 # wrap-around tokens first: looped-back work is older
                 while self._stash:
                     self._dispatch(self._stash.pop(0))
@@ -487,6 +552,8 @@ class DispatchVertex(Vertex):
                         progress = True
                         self._dispatch(item)
                         ndisp += 1
+                        if tr is not None:
+                            tr.tick("loop")
                 for i, q in enumerate(self.ins):
                     if i in eos:
                         continue
@@ -499,7 +566,12 @@ class DispatchVertex(Vertex):
                         continue
                     if self.node is not None:
                         # emitter node as per-item scheduler/filter
-                        item = self.node.svc(item)
+                        if tr is not None:
+                            t0 = tr.begin()
+                            item = self.node.svc(item)
+                            tr.end(t0, "svc")
+                        else:
+                            item = self.node.svc(item)
                         if item is None or item is GO_ON:
                             continue
                     self._dispatch(item)
@@ -558,6 +630,7 @@ class WorkerVertex(Vertex):
     def _loop(self) -> None:
         q_in, q_out = self.ins[0], self.outs[0]
         stats = self.stats
+        tr = self.tracer
         record = self.record_service  # opt-in: only pay the timing when a
         signaled = False              # policy consumes the EWMA
         spins = 0
@@ -580,6 +653,7 @@ class WorkerVertex(Vertex):
                 spins = 0
             if tok is EOS:
                 return
+            tb = tr.begin() if tr is not None else 0.0
             if record:
                 t0 = time.monotonic()
                 result = self.node.svc(tok.payload)
@@ -589,6 +663,8 @@ class WorkerVertex(Vertex):
                     dt if prev is None else 0.8 * prev + 0.2 * dt
             else:
                 result = self.node.svc(tok.payload)
+            if tr is not None:
+                tr.end(tb, "svc")
             out = Token(tag=tok.tag, payload=result,
                         issued_at=tok.issued_at, duplicate=tok.duplicate)
             if not self._push_abortable(q_out, out):
@@ -671,8 +747,14 @@ class MergeVertex(Vertex):
             # the tag is already done, the token just retires silently
             self._retire()
             return
+        tr = self.tracer
         if self.node is not None:
-            payload = self.node.svc(payload)
+            if tr is not None:
+                t0 = tr.begin()
+                payload = self.node.svc(payload)
+                tr.end(t0, "svc")
+            else:
+                payload = self.node.svc(payload)
             if payload is None or payload is GO_ON:
                 self._retire()
                 return
@@ -683,6 +765,8 @@ class MergeVertex(Vertex):
             for t in new_tasks:
                 if not self._push_abortable(self.loop_ring, t):
                     raise _Aborted()
+                if tr is not None:
+                    tr.tick("loop")
             self._retire()
             if emit is None:
                 return
@@ -720,6 +804,9 @@ class Graph:
         # post-run hooks (builders register them): fold telemetry boards
         # back into the IR node's stats once the vertices have joined
         self.finalizers: List[Callable[[], None]] = []
+        # observability: when set (obs.Tracer), run() hands each vertex its
+        # own single-writer lane before the threads start
+        self.tracer = None
 
     def channel(self, capacity: Optional[int] = None,
                 queue_class: Optional[Type] = None) -> Any:
@@ -740,6 +827,11 @@ class Graph:
 
     def run(self) -> "Graph":
         assert not self._threads, "graph already running"
+        tr = self.tracer
+        if tr is not None:
+            for v in self.vertices:
+                if v.tracer is None:
+                    v.tracer = tr.vertex(v.name, v.path)
         self._threads = [
             threading.Thread(target=v._run, name=v.name, daemon=True)
             for v in self.vertices
@@ -765,7 +857,11 @@ class Graph:
         into ``into``, keeping the per-name maximum across calls.  Autotune
         polls this from the caller thread while a pilot run drains —
         ``len()`` on every ring class is a racy-but-benign read of the
-        head/tail indices, so no locks and no effect on the stream."""
+        head/tail indices, so no locks and no effect on the stream.
+
+        Keys are IR-path qualified (``name@path``) so two farms — or two
+        stages sharing a user-visible name — cannot collide in one merged
+        report."""
         for v in self.vertices:
             depth = 0
             for ring in v.outs:
@@ -773,8 +869,9 @@ class Graph:
                     depth = max(depth, len(ring))
                 except TypeError:
                     pass
-            if depth > into.get(v.name, -1):
-                into[v.name] = depth
+            key = _qualname(v.name, v.path)
+            if depth > into.get(key, -1):
+                into[key] = depth
         return into
 
 
@@ -797,32 +894,41 @@ def ring_list(in_ring: Optional[Any]) -> List[Any]:
 
 
 def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
-          terminal: bool) -> Optional[Any]:
+          terminal: bool, path: str = "") -> Optional[Any]:
     """Wire a skeleton IR node into ``g`` between an optional inbound ring
     (or ring *list* — see :func:`ring_list`) and (unless terminal) a
     freshly created outbound ring — the threads backend of
     :func:`repro.core.skeleton.lower`.
 
+    ``path`` is the node's position in the IR tree (``"1"``, ``"1.2"`` …);
+    vertices remember it so telemetry keys (``sample_high_water``, trace
+    lanes) are namespaced per IR path and two same-named nodes never
+    collide.
+
     This is what makes skeletons close under composition: a ``Farm`` is a
     vertex of the enclosing ``Pipeline``, and vice versa."""
     if isinstance(skel, AllToAll):
         from .a2a import build_thread_a2a  # lazy: a2a imports this module
-        return build_thread_a2a(skel, g, ring_list(in_ring), terminal)
+        return build_thread_a2a(skel, g, ring_list(in_ring), terminal,
+                                path=path)
 
     if isinstance(skel, Source):
         assert in_ring is None, "Source cannot have an upstream edge"
         return build(Stage(skel.node, name=skel.name,
-                           capacity=skel.capacity), g, None, terminal)
+                           capacity=skel.capacity), g, None, terminal, path)
 
     if isinstance(skel, Pipeline):
         ring = in_ring
-        for s in skel.stages[:-1]:
-            ring = build(s, g, ring, False)
-        return build(skel.stages[-1], g, ring, terminal)
+        last = len(skel.stages) - 1
+        for i, s in enumerate(skel.stages):
+            p = f"{path}.{i}" if path else str(i)
+            if i == last:
+                return build(s, g, ring, terminal, p)
+            ring = build(s, g, ring, False, p)
 
     if isinstance(skel, Feedback):
         # predicate loop -> tagger + wrap-around farm + reorder (Sec. 5)
-        return build(skel.as_thread_net(), g, in_ring, terminal)
+        return build(skel.as_thread_net(), g, in_ring, terminal, path)
 
     if isinstance(skel, Farm):
         qc = skel.queue_class or g.queue_class
@@ -838,6 +944,7 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
             min_straggler_age=skel.min_straggler_age,
             loop_ring=loop_ring,
         ))
+        disp.path = path
         if in_ring is not None:
             disp.ins.extend(ring_list(in_ring))
         else:
@@ -848,6 +955,7 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
             ts, skel.collector, ordered=skel.ordered,
             loop_ring=loop_ring, feedback=skel.feedback,
         ))
+        merge.path = path
         for i, node in enumerate(skel.worker_nodes):
             # the policy may want a steal side-channel (worker -> arbiter)
             idle = disp.sched.worker_channel(i, qc)
@@ -856,6 +964,7 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
                                    idle_ring=idle,
                                    record_service=disp.sched.needs_service_stats,
                                    name=f"ff-worker-{i}"))
+            w.path = path
             g.connect(disp, w, capacity=cap, queue_class=qc)
             g.connect(w, merge, capacity=cap, queue_class=qc)
         if terminal:
@@ -866,6 +975,7 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
 
     if isinstance(skel, Stage):
         v = g.add(StageVertex(skel.node, name=skel.name))
+        v.path = path
         v.ins.extend(ring_list(in_ring))
         if terminal:
             return None

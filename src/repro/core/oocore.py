@@ -336,6 +336,10 @@ class SpillFold(ff_node):
     #: the vertex loop hands whole :class:`KeyBatch` messages to ``svc``
     #: instead of unpacking them — ingest amortizes per-call overhead
     accepts_batches = True
+    #: the hosting vertex binds its lane here before svc_init, so spills
+    #: surface as trace instants (child-side on procs, shipped at EOS)
+    wants_tracer = True
+    tracer = None
 
     def __init__(self, by: Callable[[Any], Any], fn: Callable[[Any, Any], Any],
                  init: Any = None, seed_first: bool = True, *,
@@ -432,8 +436,13 @@ class SpillFold(ff_node):
                 pickle.dump(kv, f, protocol=pickle.HIGHEST_PROTOCOL)
         self._runs.append(path)
         self._charge(-freed)
+        run_bytes = os.path.getsize(path)
         if self.budget is not None:
-            self.budget.spilled(self.part, os.path.getsize(path))
+            self.budget.spilled(self.part, run_bytes)
+        if self.tracer is not None:
+            self.tracer.instant("spill", {
+                "items": len(evicted), "bytes": run_bytes,
+                "runs": len(self._runs)})
 
     @staticmethod
     def _run_iter(path: str) -> Iterator[Tuple[Any, Any]]:

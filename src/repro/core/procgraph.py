@@ -75,12 +75,14 @@ import time
 import multiprocessing as mp
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
+from .obs import VertexTracer, farm_stats_snapshot, qualname as _qualname
 from .sched import Scheduler, make_scheduler
 from .shm import ShmCounters, ShmFlag, ShmRing
 from .skeleton import (BACKENDS, GO_ON, AllToAll, EmitMany, Farm, FarmStats,
                        Feedback, KeyBatch, LoweringError, Pipeline, Skeleton,
-                       Source, Stage, _FarmEmitMany, _has_grained_stage,
-                       as_skeleton, ff_node, fuse as _fuse_pass)
+                       Source, Stage, _FarmEmitMany, _coerce_metrics,
+                       _coerce_tracer, _has_grained_stage, as_skeleton,
+                       ff_node, fuse as _fuse_pass, walk_stats)
 from .spsc import EOS, SPSCQueue
 
 __all__ = [
@@ -170,9 +172,10 @@ class _CtlRing:
     """Vertex-side endpoint of the control ring (vertex → caller).
 
     Wraps the ring behind a ``put()`` so vertex code keeps its queue-ish
-    control surface; the ring never legitimately fills (≤ 2 messages per
-    vertex against capacity 8), so a timeout here means the caller is
-    gone and the message is dropped rather than wedging teardown."""
+    control surface; the ring never legitimately fills (≤ 3 messages per
+    vertex against capacity 8: ready, an optional error, an optional
+    EOS-time trace ship-back), so a timeout here means the caller is gone
+    and the message is dropped rather than wedging teardown."""
 
     __slots__ = ("_ring",)
 
@@ -353,10 +356,27 @@ class ProcVertex:
         self.failed: Any = None   # ShmFlag, set by ProcGraph.add
         self.ctl: Any = None      # _CtlRing, set by ProcGraph.add
         self.cpus: Optional[Tuple[int, ...]] = None
+        # observability: ``path`` is the IR path assigned by build();
+        # trace config travels as plain ints (picklable through spawn and
+        # the pool job queue) — the VertexTracer itself is built child-
+        # side in _run() and shipped back over the control ring at EOS
+        self.path = ""
+        self.trace_sample = 0     # 0 = tracing off
+        self.trace_capacity = 0
+        self.tracer: Optional[VertexTracer] = None
 
     # -- lifecycle (runs in the vertex's own process) -----------------------
     def _run(self) -> None:
+        t_birth = 0.0
         try:
+            if self.trace_sample:
+                self.tracer = VertexTracer(self.name, self.path,
+                                           sample=self.trace_sample,
+                                           capacity=self.trace_capacity)
+                t_birth = time.monotonic()
+                if self.node is not None and \
+                        getattr(self.node, "wants_tracer", False):
+                    self.node.tracer = self.tracer
             if self.cpus:
                 try:
                     os.sched_setaffinity(0, self.cpus)
@@ -378,6 +398,15 @@ class ProcVertex:
                     self.node.svc_end()
                 except BaseException as e:  # pragma: no cover - defensive
                     self._report_error(e)
+            tr = self.tracer
+            if tr is not None:
+                tr.instant("eos")
+                tr.span("life", t_birth, time.monotonic())
+                try:  # ship the lane home; best-effort at teardown
+                    self.ctl.put(("trace", self.name, self.path,
+                                  os.getpid(), tr.events, tr.dropped))
+                except Exception:  # pragma: no cover - caller gone
+                    pass
             self._flush_stats()
             for q in self.ins + self.outs:
                 q.close()
@@ -464,9 +493,15 @@ class ProcStageVertex(ProcVertex):
         self._obuf = []
 
     def _loop(self) -> None:
+        tr = self.tracer
         if not self.ins:  # source
             while True:
-                out = self.node.svc(None)
+                if tr is not None:
+                    t0 = tr.begin()
+                    out = self.node.svc(None)
+                    tr.end(t0, "svc")
+                else:
+                    out = self.node.svc(None)
                 if out is None or out is EOS:
                     break
                 if out is GO_ON:
@@ -497,12 +532,22 @@ class ProcStageVertex(ProcVertex):
                         # batched wire format: unpack here so the node
                         # still sees items (batching is transport only)
                         for x in item:
-                            out = self.node.svc(x)
+                            if tr is not None:
+                                t0 = tr.begin()
+                                out = self.node.svc(x)
+                                tr.end(t0, "svc")
+                            else:
+                                out = self.node.svc(x)
                             if out is None or out is GO_ON:
                                 continue
                             self._emit(out)
                         continue
-                    out = self.node.svc(item)
+                    if tr is not None:
+                        t0 = tr.begin()
+                        out = self.node.svc(item)
+                        tr.end(t0, "svc")
+                    else:
+                        out = self.node.svc(item)
                     if out is None or out is GO_ON:
                         continue  # filtered
                     self._emit(out)
@@ -556,7 +601,7 @@ class ProcDispatchVertex(ProcVertex):
                  loop_board: Optional[ShmCounters] = None,
                  service_rings: Optional[List[ShmRing]] = None,
                  stats_out: Optional[ShmRing] = None,
-                 name: str = "ff-pemitter"):
+                 name: str = "ff-emitter"):
         super().__init__(node, name=name)
         self.sched = sched
         self.loop_ring = loop_ring
@@ -583,6 +628,10 @@ class ProcDispatchVertex(ProcVertex):
         """Blocking push that keeps draining the wrap-around ring while
         the target worker ring is full (breaks cyclic backpressure, same
         argument as ``graph.DispatchVertex._push_with_loop_drain``)."""
+        if q.push(tok):
+            return  # fast path: no stall, no clock read
+        tr = self.tracer
+        t0 = time.monotonic() if tr is not None else 0.0
         spins = 0
         while not q.push(tok):
             if self.loop_ring is not None:
@@ -595,6 +644,8 @@ class ProcDispatchVertex(ProcVertex):
                 if self.failed.is_set():
                     raise _Aborted()
                 time.sleep(_POLL)
+        if tr is not None:
+            tr.span("stall", t0, time.monotonic())
 
     def _emit_to(self, widx: int, tok: tuple) -> None:
         self._push_with_loop_drain(self.outs[widx], tok)
@@ -613,6 +664,8 @@ class ProcDispatchVertex(ProcVertex):
         # while the policy backlog is over its high-water mark
         hw = self.sched.high_water
         if hw is not None and self.sched.pending() > hw:
+            tr = self.tracer
+            t0 = time.monotonic() if tr is not None else 0.0
             spins = 0
             while self.sched.pending() > hw:
                 if self.sched.pump():
@@ -627,6 +680,8 @@ class ProcDispatchVertex(ProcVertex):
                 spins += 1
                 if spins > 64:
                     time.sleep(_POLL)
+            if tr is not None:
+                tr.span("stall", t0, time.monotonic())
 
     def _quiescent(self) -> bool:
         """entered == retired and the wrap-around ring is drained.  Read
@@ -637,24 +692,37 @@ class ProcDispatchVertex(ProcVertex):
 
     def _loop(self) -> None:
         self.sched.bind(self.outs, self.stats)
+        tr = self.tracer
+        steals0 = self.stats.steals if tr is not None else 0
         backoff = _Backoff()
         if self.node is not None and not self.ins:
             # source mode: the emitter node generates the stream
             while True:
                 self._drain_service()
-                task = self.node.svc(None)
+                if tr is not None:
+                    t0 = tr.begin()
+                    task = self.node.svc(None)
+                    tr.end(t0, "svc")
+                else:
+                    task = self.node.svc(None)
                 if task is None or task is EOS:
                     break
                 if task is GO_ON:
                     continue
                 self._dispatch(task)
                 self.sched.pump()
+                if tr is not None and self.stats.steals != steals0:
+                    tr.instant("steal",
+                               {"count": self.stats.steals - steals0})
+                    steals0 = self.stats.steals
                 if self.loop_ring is not None:
                     while True:
                         item = self.loop_ring.pop()
                         if item is _EMPTY:
                             break
                         self._dispatch(item)
+                        if tr is not None:
+                            tr.tick("loop")
             # source exhausted; drain the loop to quiescence
             while self.loop_ring is not None:
                 progress = self.sched.pump()
@@ -667,6 +735,8 @@ class ProcDispatchVertex(ProcVertex):
                         break
                     progress = True
                     self._dispatch(item)
+                    if tr is not None:
+                        tr.tick("loop")
                 if not self._stash and not self.sched.pending() \
                         and self._quiescent():
                     break
@@ -683,6 +753,10 @@ class ProcDispatchVertex(ProcVertex):
             while True:
                 progress = self.sched.pump()
                 self._drain_service()
+                if tr is not None and self.stats.steals != steals0:
+                    tr.instant("steal",
+                               {"count": self.stats.steals - steals0})
+                    steals0 = self.stats.steals
                 # wrap-around tokens first: looped-back work is older
                 while self._stash:
                     self._dispatch(self._stash.pop(0))
@@ -694,6 +768,8 @@ class ProcDispatchVertex(ProcVertex):
                             break
                         progress = True
                         self._dispatch(item)
+                        if tr is not None:
+                            tr.tick("loop")
                 for i, q in enumerate(self.ins):
                     if i in eos:
                         continue
@@ -707,7 +783,12 @@ class ProcDispatchVertex(ProcVertex):
                             break
                         if self.node is not None:
                             # emitter node as per-item scheduler/filter
-                            item = self.node.svc(item)
+                            if tr is not None:
+                                t0 = tr.begin()
+                                item = self.node.svc(item)
+                                tr.end(t0, "svc")
+                            else:
+                                item = self.node.svc(item)
                             if item is None or item is GO_ON:
                                 continue
                         self._dispatch(item)
@@ -749,7 +830,7 @@ class ProcWorkerVertex(ProcVertex):
     def __init__(self, node: ff_node, index: int, *,
                  idle_ring: Optional[ShmRing] = None,
                  service_ring: Optional[ShmRing] = None,
-                 name: str = "ff-pworker"):
+                 name: str = "ff-worker"):
         super().__init__(node, name=name)
         self.index = index
         self.idle_ring = idle_ring
@@ -757,6 +838,7 @@ class ProcWorkerVertex(ProcVertex):
 
     def _loop(self) -> None:
         q_in, q_out = self.ins[0], self.outs[0]
+        tr = self.tracer
         record = self.service_ring is not None
         ewma: Optional[float] = None
         backoff = _Backoff()
@@ -785,6 +867,7 @@ class ProcWorkerVertex(ProcVertex):
                     self._push_abortable(q_out, _WorkerStats(self.index, ewma))
                 return
             tag, issued, payload = tok
+            tb = tr.begin() if tr is not None else 0.0
             if record:
                 t0 = time.monotonic()
                 result = self.node.svc(payload)
@@ -793,6 +876,8 @@ class ProcWorkerVertex(ProcVertex):
                 self.service_ring.push((self.index, ewma))  # drop-if-full ok
             else:
                 result = self.node.svc(payload)
+            if tr is not None:
+                tr.end(tb, "svc")
             if not self._push_abortable(q_out, (tag, issued, result)):
                 raise _Aborted()
 
@@ -817,7 +902,7 @@ class ProcMergeVertex(ProcVertex):
                  feedback: Optional[Callable[[Any], Tuple[Any, Iterable[Any]]]] = None,
                  stats_in: Optional[ShmRing] = None,
                  stats_out: Optional[ShmRing] = None,
-                 name: str = "ff-pcollector"):
+                 name: str = "ff-collector"):
         super().__init__(node, name=name)
         self.ordered = ordered
         self.loop_ring = loop_ring
@@ -876,8 +961,14 @@ class ProcMergeVertex(ProcVertex):
         if payload is GO_ON:
             self._retire()
             return
+        tr = self.tracer
         if self.node is not None:
-            payload = self.node.svc(payload)
+            if tr is not None:
+                t0 = tr.begin()
+                payload = self.node.svc(payload)
+                tr.end(t0, "svc")
+            else:
+                payload = self.node.svc(payload)
             if payload is None or payload is GO_ON:
                 self._retire()
                 return
@@ -889,6 +980,8 @@ class ProcMergeVertex(ProcVertex):
             for t in new_tasks:
                 if not self._push_abortable(self.loop_ring, t):
                     raise _Aborted()
+                if tr is not None:
+                    tr.tick("loop")
             self._retire()
             if emit is None:
                 return
@@ -983,6 +1076,10 @@ class ProcGraph:
         self._eos_seen = False
         self._ready = 0
         self._cleaned = False
+        # observability: when set (obs.Tracer), run() hands each vertex
+        # its sampling config; lanes come home over the control rings at
+        # EOS and are absorbed here (caller side) by _on_ctl
+        self.tracer = None
 
     # -- construction -------------------------------------------------------
     def channel(self, capacity: Optional[int] = None,
@@ -1012,7 +1109,9 @@ class ProcGraph:
         record each vertex's current outbound queue depth into ``into``,
         keeping the per-name maximum across calls.  The caller owns the
         ring segments, so ``len()`` (a read of the shared head/tail
-        counters) works cross-process without touching the stream."""
+        counters) works cross-process without touching the stream.  Keys
+        are IR-path qualified (``name@path``), mirroring the threads
+        backend, so merged reports cannot collide."""
         for v in self.vertices:
             depth = 0
             for ring in v.outs:
@@ -1020,8 +1119,9 @@ class ProcGraph:
                     depth = max(depth, len(ring))
                 except (TypeError, OSError):
                     pass
-            if depth > into.get(v.name, -1):
-                into[v.name] = depth
+            key = _qualname(v.name, v.path)
+            if depth > into.get(key, -1):
+                into[key] = depth
         return into
 
     def add(self, v: ProcVertex) -> ProcVertex:
@@ -1059,6 +1159,11 @@ class ProcGraph:
     # -- execution ----------------------------------------------------------
     def run(self) -> "ProcGraph":
         assert not self._procs, "graph already running"
+        tr = self.tracer
+        if tr is not None:
+            for v in self.vertices:
+                v.trace_sample = tr.sample
+                v.trace_capacity = tr.capacity
         pickling_errors = (pickle.PicklingError, AttributeError, TypeError)
         if self._pool is not None:
             for v in self.vertices:
@@ -1139,6 +1244,10 @@ class ProcGraph:
             _, name, rep, exc = msg
             self.failed.append(
                 exc if exc is not None else RuntimeError(f"{name}: {rep}"))
+        elif msg[0] == "trace":
+            _, name, path, pid, events, dropped = msg
+            if self.tracer is not None:
+                self.tracer.absorb(name, path, pid, events, dropped)
 
     def _drain_ctl(self) -> None:
         for ring in self._ctl_rings:
@@ -1306,30 +1415,36 @@ class ProcGraph:
 # procs lowering: IR tree -> spawned vertices + shared-memory rings
 # ---------------------------------------------------------------------------
 def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
-          terminal: bool) -> Optional[Any]:
+          terminal: bool, path: str = "") -> Optional[Any]:
     """Wire a skeleton IR node into ``g`` — the procs twin of
     :func:`repro.core.graph.build`, one spawned process per vertex.
-    ``in_ring`` may be one ring or a list (a terminal all-to-all row)."""
+    ``in_ring`` may be one ring or a list (a terminal all-to-all row).
+    ``path`` is the node's IR path, carried onto every vertex so
+    telemetry keys match the threads backend's."""
     from .graph import ring_list
 
     if isinstance(skel, AllToAll):
         from .a2a import build_proc_a2a  # lazy: a2a imports this module
-        return build_proc_a2a(skel, g, ring_list(in_ring), terminal)
+        return build_proc_a2a(skel, g, ring_list(in_ring), terminal,
+                              path=path)
 
     if isinstance(skel, Source):
         assert in_ring is None, "Source cannot have an upstream edge"
         return build(Stage(skel.node, name=skel.name, grain=skel.grain,
-                           capacity=skel.capacity), g, None, terminal)
+                           capacity=skel.capacity), g, None, terminal, path)
 
     if isinstance(skel, Pipeline):
         ring = in_ring
-        for s in skel.stages[:-1]:
-            ring = build(s, g, ring, False)
-        return build(skel.stages[-1], g, ring, terminal)
+        last = len(skel.stages) - 1
+        for i, s in enumerate(skel.stages):
+            p = f"{path}.{i}" if path else str(i)
+            if i == last:
+                return build(s, g, ring, terminal, p)
+            ring = build(s, g, ring, False, p)
 
     if isinstance(skel, Feedback):
         # predicate loop -> tagger + wrap-around farm + reorder (Sec. 5)
-        return build(skel.as_thread_net(), g, in_ring, terminal)
+        return build(skel.as_thread_net(), g, in_ring, terminal, path)
 
     if isinstance(skel, Farm):
         if skel.speculative:
@@ -1353,6 +1468,7 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
         disp = g.add(ProcDispatchVertex(
             sched, skel.emitter, loop_ring=loop_ring, loop_board=board,
             service_rings=service_rings, stats_out=d2m))
+        disp.path = path
         if in_ring is not None:
             disp.ins.extend(ring_list(in_ring))
         else:
@@ -1363,6 +1479,7 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
             skel.collector, ordered=skel.ordered, loop_ring=loop_ring,
             loop_board=board, feedback=skel.feedback,
             stats_in=d2m, stats_out=stats_ring))
+        merge.path = path
         for i, node in enumerate(skel.worker_nodes):
             idle = sched.worker_channel(i, g.channel)
             service = g.channel(64) if sched.needs_service_stats else None
@@ -1370,7 +1487,8 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
                 service_rings.append(service)
             w = g.add(ProcWorkerVertex(node, i, idle_ring=idle,
                                        service_ring=service,
-                                       name=f"ff-pworker-{i}"))
+                                       name=f"ff-worker-{i}"))
+            w.path = path
             w.cpus = sched.worker_cpus(i, len(skel.worker_nodes))
             g.connect(disp, w, capacity=cap)
             g.connect(w, merge, capacity=cap)
@@ -1384,6 +1502,7 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
     if isinstance(skel, Stage):
         v = g.add(ProcStageVertex(skel.node, name=skel.name,
                                   batch=g.batch_for(skel.grain)))
+        v.path = path
         v.ins.extend(ring_list(in_ring))
         if terminal:
             v.outs.append(g.results_ring())
@@ -1419,7 +1538,8 @@ class ProcProgram:
                  slot_size: int = 248, timeout: Optional[float] = 120.0,
                  fuse: Any = "auto", fuse_threshold_us: Optional[float] = None,
                  zero_copy: bool = True, batch: Any = None,
-                 pool: Optional[bool] = None):
+                 pool: Optional[bool] = None,
+                 trace: Any = False, metrics: Any = False):
         if fuse and isinstance(skeleton, Pipeline):
             force = fuse is True
             thr = fuse_threshold_us
@@ -1434,25 +1554,59 @@ class ProcProgram:
         self.zero_copy = zero_copy
         self.batch = batch
         self.pool = pool
+        self.tracer = _coerce_tracer(trace)
+        self.metrics = _coerce_metrics(metrics)
+        self.last_trace = None
+        self.last_report = None
 
     def to_graph(self, stream: Optional[Iterable[Any]] = None) -> ProcGraph:
         g = ProcGraph(capacity=self.capacity, slot_size=self.slot_size,
                       zero_copy=self.zero_copy, batch=self.batch,
                       pool=self.pool)
-        skel = (self.skeleton if stream is None
-                else Pipeline(Source(stream), self.skeleton))
         try:
-            build(skel, g, None, True)
+            # Build the driving Source separately (at path "in") so the
+            # user skeleton keeps its root IR paths — telemetry keys
+            # vertices by path, and wrapping in a fresh Pipeline would
+            # shift every top-level index by one.
+            in_ring = None
+            if stream is not None:
+                in_ring = build(Source(stream), g, None, False, "in")
+            build(self.skeleton, g, in_ring, True)
         except BaseException:
             g.shutdown()  # unlink whatever the partial build created
             raise
+        if self.tracer is not None:
+            g.tracer = self.tracer
         return g
 
     def __call__(self, items: Iterable[Any]) -> List[Any]:
         xs = list(items)
         if not xs:
             return []  # nothing to stream; skip the spawn entirely
-        return self.to_graph(xs).run_and_wait(self.timeout)
+        g = self.to_graph(xs)
+        reg = self.metrics
+        if reg is None:
+            out = g.run_and_wait(self.timeout)
+        else:
+            hw: Dict[str, int] = {}
+            t0 = time.monotonic()
+            g.run()
+
+            def drain() -> bool:  # the wait loop doubles as the hw tap
+                g.sample_high_water(hw)
+                return g.poll_results()
+
+            out = g._wait_until(drain, self.timeout)
+            farms = {q: farm_stats_snapshot(st)
+                     for q, st in walk_stats(self.skeleton)}
+            self.last_report = reg.finalize(reg.report(
+                farms=farms, queues=hw, pool=pool_stats(),
+                meta={"backend": "procs", "vertices": len(g.vertices),
+                      "items_in": len(xs), "items_out": len(out),
+                      "wall_s": time.monotonic() - t0}))
+        if self.tracer is not None:
+            self.last_trace = self.tracer.trace()
+        return out
 
 
 BACKENDS["procs"] = ProcProgram
@@ -1531,7 +1685,7 @@ class ProcAccelerator:
             if service is not None:
                 self._service_rings.append(service)
             w = g.add(ProcWorkerVertex(node, i, service_ring=service,
-                                       name=f"ff-pworker-{i}"))
+                                       name=f"ff-worker-{i}"))
             w.cpus = self._sched.worker_cpus(i, len(skel.worker_nodes))
             q_in, q_out = g.channel(cap), g.channel(cap)
             w.ins.append(q_in)

@@ -40,15 +40,19 @@ arrays, which for elementwise arithmetic is identical to the scalar form).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Type
+
+from .obs import (MetricsRegistry, Tracer, farm_stats_snapshot,
+                  qualname as _obs_qualname)
 
 __all__ = [
     "GO_ON", "EmitMany", "KeyBatch", "ff_node", "FnNode", "FusedNode",
     "FarmStats", "LatencyReservoir",
     "Skeleton", "Stage", "Source", "Pipeline", "Farm", "Feedback",
     "AllToAll",
-    "compose", "as_skeleton", "fuse",
+    "compose", "as_skeleton", "fuse", "walk_stats",
     "LoweringError", "lower", "BACKENDS", "ThreadProgram", "MeshProgram",
 ]
 
@@ -1020,6 +1024,32 @@ def lower(skel: Any, backend: str = "threads", **opts: Any):
     return cls(skel, **opts)
 
 
+def walk_stats(skel: Skeleton, path: str = "") -> Iterable[Tuple[str, Any]]:
+    """Yield ``(qualname, FarmStats)`` for every stats-carrying node in
+    the IR tree — the walk a :class:`~repro.core.obs.RunReport` absorbs.
+    Keys are IR-path qualified (``ff-farm@1``), so two farms in one
+    pipeline land in separate report rows."""
+    if isinstance(skel, Pipeline):
+        for i, s in enumerate(skel.stages):
+            yield from walk_stats(s, f"{path}.{i}" if path else str(i))
+    elif isinstance(skel, Farm):
+        yield _obs_qualname("ff-farm", path), skel.stats
+    elif isinstance(skel, AllToAll):
+        yield _obs_qualname(skel.name, path), skel.stats
+
+
+def _coerce_tracer(trace: Any) -> Optional[Tracer]:
+    if isinstance(trace, Tracer):
+        return trace
+    return Tracer() if trace else None
+
+
+def _coerce_metrics(metrics: Any) -> Optional[MetricsRegistry]:
+    if isinstance(metrics, MetricsRegistry):
+        return metrics
+    return MetricsRegistry() if metrics else None
+
+
 class ThreadProgram:
     """Threads lowering: the skeleton wired onto the PR-1 graph runtime
     (one thread per vertex, lock-free SPSC rings for every edge).
@@ -1029,13 +1059,22 @@ class ThreadProgram:
     calibrated threshold (``fuse_threshold_us``, or the measured per-item
     hand-off cost when None — calibration only runs if some stage declares
     a grain); ``True`` force-fuses every eligible adjacent pair; ``False``
-    disables the pass."""
+    disables the pass.
+
+    ``trace=True`` (or a :class:`~repro.core.obs.Tracer`) gives every
+    vertex a sampled event lane; the merged
+    :class:`~repro.core.obs.Trace` lands on ``last_trace`` after each
+    call.  ``metrics=True`` (or a
+    :class:`~repro.core.obs.MetricsRegistry`) samples queue depths while
+    the run drains and absorbs the skeleton's ``FarmStats`` into a
+    :class:`~repro.core.obs.RunReport` on ``last_report``."""
 
     backend = "threads"
 
     def __init__(self, skeleton: Skeleton, *,
                  queue_class: Optional[Type] = None, capacity: int = 512,
-                 fuse: Any = "auto", fuse_threshold_us: Optional[float] = None):
+                 fuse: Any = "auto", fuse_threshold_us: Optional[float] = None,
+                 trace: Any = False, metrics: Any = False):
         if fuse and isinstance(skeleton, Pipeline):
             force = fuse is True
             thr = fuse_threshold_us
@@ -1046,19 +1085,53 @@ class ThreadProgram:
         self.skeleton = skeleton
         self.queue_class = queue_class
         self.capacity = capacity
+        self.tracer = _coerce_tracer(trace)
+        self.metrics = _coerce_metrics(metrics)
+        self.last_trace = None
+        self.last_report = None
 
     def to_graph(self, stream: Optional[Iterable[Any]] = None):
         from . import graph  # the threads backend (PR-1 vertex machinery)
         from .spsc import SPSCQueue
         g = graph.Graph(queue_class=self.queue_class or SPSCQueue,
                         capacity=self.capacity)
-        skel = (self.skeleton if stream is None
-                else Pipeline(Source(stream), self.skeleton))
-        graph.build(skel, g, None, True)
+        # Build the driving Source separately (at path "in") so the user
+        # skeleton keeps its root IR paths — telemetry keys vertices by
+        # path, and wrapping in a fresh Pipeline would shift every
+        # top-level index by one.
+        in_ring = None
+        if stream is not None:
+            in_ring = graph.build(Source(stream), g, None, False, "in")
+        graph.build(self.skeleton, g, in_ring, True)
+        if self.tracer is not None:
+            g.tracer = self.tracer
         return g
 
     def __call__(self, items: Iterable[Any]) -> List[Any]:
-        return self.to_graph(list(items)).run_and_wait()
+        xs = list(items)
+        g = self.to_graph(xs)
+        reg = self.metrics
+        if reg is None:
+            out = g.run_and_wait()
+        else:
+            hw: Dict[str, int] = {}
+            t0 = time.monotonic()
+            g.run()
+            while any(t.is_alive() for t in g._threads):
+                g.sample_high_water(hw)
+                time.sleep(0.0005)
+            g.sample_high_water(hw)  # a short run can finish before the
+            out = g.wait()           # first poll: every key still lands
+            farms = {q: farm_stats_snapshot(st)
+                     for q, st in walk_stats(self.skeleton)}
+            self.last_report = reg.finalize(reg.report(
+                farms=farms, queues=hw,
+                meta={"backend": "threads", "vertices": len(g.vertices),
+                      "items_in": len(xs), "items_out": len(out),
+                      "wall_s": time.monotonic() - t0}))
+        if self.tracer is not None:
+            self.last_trace = self.tracer.trace()
+        return out
 
 
 BACKENDS["threads"] = ThreadProgram
@@ -1148,7 +1221,8 @@ class MeshProgram:
     def __init__(self, skeleton: Skeleton, *, devices: Optional[int] = None,
                  grain: Optional[int] = None, capacity: Optional[int] = None,
                  block: int = 64, check_vma: Optional[bool] = None,
-                 factorization: Optional[Tuple[int, int]] = None):
+                 factorization: Optional[Tuple[int, int]] = None,
+                 trace: Any = False, metrics: Any = False):
         import jax
         from . import dpipeline
 
@@ -1178,6 +1252,19 @@ class MeshProgram:
         self.mesh = compat.make_mesh((self.n_stage, self.n_worker),
                                      (STAGE_AXIS, WORKER_AXIS))
         self._programs: Dict[Tuple[int, int, str], Callable] = {}
+        # observability: a mesh run has no host vertices, so the trace is
+        # program-level — one "mesh-program" lane carrying a devices
+        # instant, one compile span per cache miss, one call span per run
+        self.tracer = _coerce_tracer(trace)
+        self.metrics = _coerce_metrics(metrics)
+        self.last_trace = None
+        self.last_report = None
+        self._lane = None
+        if self.tracer is not None:
+            self._lane = self.tracer.vertex("mesh-program")
+            self._lane.instant("devices", {
+                "devices": self.n_stage * self.n_worker,
+                "n_stage": self.n_stage, "n_worker": self.n_worker})
 
     # -- host-side packing ---------------------------------------------------
     def _bucket_rows(self, n: int) -> int:
@@ -1222,7 +1309,22 @@ class MeshProgram:
         padded = np.zeros((self.n_worker * rows, d + 1), arr.dtype)
         padded[:n, :d] = arr
         padded[:n, d] = 1
-        out = np.asarray(self._program(rows, d, str(arr.dtype))(padded))
+        prog = self._program(rows, d, str(arr.dtype))
+        t0 = time.monotonic()
+        out = np.asarray(prog(padded))
+        t1 = time.monotonic()
+        if self._lane is not None:
+            self._lane.span("call", t0, t1, {"items": n, "rows": rows})
+            self.last_trace = self.tracer.trace()
+        if self.metrics is not None:
+            reg = self.metrics
+            reg.counter("mesh.calls").inc()
+            reg.counter("mesh.items").inc(n)
+            reg.gauge("mesh.devices").set(self.n_stage * self.n_worker)
+            reg.histogram("mesh.call_us").observe((t1 - t0) * 1e6)
+            self.last_report = reg.finalize(reg.report(
+                meta={"backend": "mesh", "n_stage": self.n_stage,
+                      "n_worker": self.n_worker}))
         out = out[:n, :d]
         if squeeze:
             return [v.item() for v in out[:, 0]]
@@ -1233,6 +1335,7 @@ class MeshProgram:
         key = (rows, d, dtype)
         if key in self._programs:
             return self._programs[key]
+        t_compile = time.monotonic()
 
         import jax
         import jax.numpy as jnp
@@ -1302,6 +1405,11 @@ class MeshProgram:
             body, mesh=self.mesh, in_specs=(P(WORKER_AXIS),),
             out_specs=P(WORKER_AXIS), check_vma=check_vma))
         self._programs[key] = fn
+        if self._lane is not None:
+            self._lane.span("compile", t_compile, time.monotonic(),
+                            {"rows": rows, "d": d, "dtype": dtype})
+        if self.metrics is not None:
+            self.metrics.counter("mesh.compiles").inc()
         return fn
 
 

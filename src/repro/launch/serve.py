@@ -45,6 +45,7 @@ import numpy as np
 
 from ..configs import ARCHS
 from ..core.allocator import PagePool
+from ..core.obs import MetricsRegistry
 from ..core.sched import CostModel
 from ..core.skeleton import Farm, Source, compose, lower
 from ..core.spsc import SPSCQueue
@@ -63,6 +64,7 @@ class Request:
     max_new: int = 16
     eos_id: Optional[int] = None
     # filled by the engine:
+    submitted: float = 0.0  # monotonic submit() timestamp (latency origin)
     tag: int = -1
     slot: int = -1
     start: int = -1
@@ -93,9 +95,14 @@ class ServeEngine:
             lambda p, b, c, l: model_decode(p, b, c, l, cfg),
             donate_argnums=(2,))
         self.steps_run = 0
+        self.metrics = MetricsRegistry()
+        self._latency = self.metrics.histogram("serve.request_latency_us")
+        self.last_report = None
 
     # -- emitter side --------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if req.submitted == 0.0:
+            req.submitted = time.monotonic()
         self.in_q.push_wait(req)
 
     def _admit(self) -> None:
@@ -171,7 +178,11 @@ class ServeEngine:
             self.pool.free(slot, 0)
             self.done[req.tag] = req
         while self.emit_next in self.done:
-            self.results.append(self.done.pop(self.emit_next))
+            req = self.done.pop(self.emit_next)
+            if req.submitted:
+                self._latency.observe(
+                    (time.monotonic() - req.submitted) * 1e6)
+            self.results.append(req)
             self.emit_next += 1
 
     def _drain_submitted(self) -> List[Request]:
@@ -245,7 +256,22 @@ class ServeEngine:
         net = compose(Source(stream),
                       Farm(decode_step, feedback=still_generating,
                            scheduling=CostModel()))
+        n_before = len(self.results)
+        toks_before = sum(len(r.generated) for r in self.results)
+        t0 = time.monotonic()
         lower(net, "threads").to_graph().run_and_wait()
+        wall = time.monotonic() - t0
+        served = len(self.results) - n_before
+        toks = sum(len(r.generated) for r in self.results) - toks_before
+        reg = self.metrics
+        reg.counter("serve.requests").inc(served)
+        reg.counter("serve.tokens").inc(toks)
+        reg.counter("serve.steps").inc(self.steps_run)
+        if wall > 0:
+            reg.gauge("serve.tokens_per_s").set(toks / wall)
+        self.last_report = reg.finalize(reg.report(meta={
+            "backend": "threads", "engine": "serve",
+            "requests": served, "tokens": toks, "wall_s": wall}))
         return self.results
 
 
@@ -268,6 +294,12 @@ def main():
     toks = sum(len(r.generated) for r in results)
     print(f"[serve] {len(results)} requests, {toks} tokens, "
           f"{eng.steps_run} engine steps, {toks/dt:.1f} tok/s")
+    lat = eng._latency
+    tok_s = eng.last_report.gauges.get("serve.tokens_per_s", 0.0) \
+        if eng.last_report is not None else 0.0
+    print(f"[serve] latency p50={lat.p50/1e3:.1f}ms "
+          f"p95={lat.p95/1e3:.1f}ms p99={lat.p99/1e3:.1f}ms, "
+          f"{tok_s:.1f} tok/s (engine wall)")
     for r in results[:4]:
         print(f"  tag={r.tag} rid={r.rid} out={r.generated[:8]}")
     assert [r.tag for r in results] == sorted(r.tag for r in results), \

@@ -75,6 +75,26 @@ def test_autotune_stays_jax_free():
         "assert 'jax' not in sys.modules, 'autotune imported jax'")
 
 
+def test_obs_stays_jax_free():
+    """The observability layer rides in every spawned vertex (child-side
+    VertexTracer construction) and in the eager ``repro.core`` surface:
+    importing it, tracing a lowered run, and exporting Chrome JSON must
+    never load jax."""
+    _run_isolated(
+        "import sys\n"
+        "import repro.core.obs\n"
+        "from repro.core import Farm, MetricsRegistry, Tracer, lower\n"
+        "def f(x): return x + 1\n"
+        "prog = lower(Farm(f, nworkers=2), 'threads', trace=True, "
+        "metrics=True)\n"
+        "out = prog(range(50))\n"
+        "assert sorted(out) == list(range(1, 51)), out\n"
+        "doc = prog.last_trace.to_chrome_json()\n"
+        "assert doc['traceEvents'], 'empty trace'\n"
+        "assert prog.last_report.farms, 'no farm stats in report'\n"
+        "assert 'jax' not in sys.modules, 'obs/tracing imported jax'")
+
+
 def test_ir_construction_stays_jax_free():
     """Building and thread-lowering a keyed reduction — the exact work a
     spawned vertex's unpickle path does — must not touch jax either."""

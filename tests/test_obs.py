@@ -1,0 +1,208 @@
+"""Unified observability layer (repro.core.obs): vertex tracing, the
+metrics registry, and the run-report surface.
+
+The load-bearing pins:
+
+* span-topology parity — the SAME skeleton lowered to threads and procs
+  produces the SAME lanes with the SAME span vocabulary, because the
+  vertex names and IR paths are backend-neutral (the whole point of
+  qualifying telemetry by IR path instead of by runtime object);
+* tracing off allocates NOTHING in obs.py — the overhead claim is
+  structural (vertices carry ``tracer = None`` and never enter the
+  module), not statistical;
+* Chrome trace-event export is schema-valid: every event is a metadata
+  ("M"), complete ("X", dur >= 0) or instant ("i", thread scope) record
+  tied to a named lane.
+"""
+import json
+import tracemalloc
+
+import pytest
+
+from repro.core import (Farm, Histogram, MetricsRegistry, Pipeline, Stage,
+                        Tracer, lower)
+from repro.core import obs as obs_mod
+from tests._procs_nodes import double, f, g
+
+SKEL = Pipeline(Stage(f), Farm(double, nworkers=2), Stage(g))
+XS = list(range(120))
+WANT = sorted(g(double(f(x))) for x in XS)
+
+
+def _lane_topology(trace):
+    """(qualname, span-kind set) per lane — the backend-neutral shape."""
+    return {vt.qualname: frozenset(e[0] for e in vt.events
+                                   if e[0] in obs_mod.SPAN_KINDS)
+            for vt in trace.lanes}
+
+
+# -- parity ------------------------------------------------------------------
+def test_span_topology_parity_threads_procs():
+    tprog = lower(SKEL, "threads", trace=True)
+    assert sorted(tprog(XS)) == WANT
+    pprog = lower(SKEL, "procs", trace=True)
+    assert sorted(pprog(XS)) == WANT
+
+    tt, pt = _lane_topology(tprog.last_trace), _lane_topology(pprog.last_trace)
+    assert sorted(tt) == sorted(pt), (sorted(tt), sorted(pt))
+    for qual in tt:
+        assert tt[qual] == pt[qual], (qual, tt[qual], pt[qual])
+    # the farm lanes exist under their backend-neutral names, qualified
+    # by the farm's IR path (stage 1 of the pipeline)
+    for qual in ("ff-emitter@1", "ff-collector@1", "ff-worker-0@1",
+                 "ff-worker-1@1", "ff-stage@0", "ff-stage@2",
+                 "ff-source@in"):
+        assert qual in tt, (qual, sorted(tt))
+    # every lane closed out: exactly one eos instant and one life span
+    for trace in (tprog.last_trace, pprog.last_trace):
+        for vt in trace.lanes:
+            kinds = [e[0] for e in vt.events]
+            assert kinds.count("eos") == 1, (vt.qualname, kinds)
+            assert kinds.count("life") == 1, (vt.qualname, kinds)
+
+
+def test_mesh_program_level_events():
+    pytest.importorskip("jax")
+    prog = lower(Farm(double, nworkers=2), "mesh", trace=True, metrics=True)
+    out = prog([float(x) for x in range(32)])
+    assert sorted(out) == [2.0 * x for x in range(32)]
+    tr = prog.last_trace
+    assert tr.qualnames() == ["mesh-program"]
+    kinds = [e[0] for e in tr.events()]
+    assert "devices" in kinds and "compile" in kinds and "call" in kinds
+    # a second same-shaped call reuses the compile: calls grow, compiles
+    # don't
+    prog([float(x) for x in range(32)])
+    assert prog.metrics.counter("mesh.compiles").value == 1
+    assert prog.metrics.counter("mesh.calls").value == 2
+
+
+# -- overhead: tracing off touches obs.py not at all -------------------------
+def test_tracer_off_allocates_nothing():
+    prog = lower(SKEL, "threads")  # no trace=
+    prog(XS)  # warm the lowering before the snapshot window
+    tracemalloc.start()
+    try:
+        assert sorted(prog(XS)) == WANT
+        snap = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    obs_allocs = snap.filter_traces(
+        [tracemalloc.Filter(True, obs_mod.__file__)])
+    total = sum(s.size for s in obs_allocs.statistics("filename"))
+    assert total == 0, f"tracing-off run allocated {total}B in obs.py"
+    assert prog.last_trace is None and prog.last_report is None
+
+
+# -- chrome export -----------------------------------------------------------
+def test_chrome_json_schema_valid(tmp_path):
+    prog = lower(SKEL, "threads", trace=True)
+    prog(XS)
+    path = tmp_path / "trace.json"
+    doc = prog.last_trace.to_chrome_json(str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == doc
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert evs, "empty export"
+    lanes_named = set()
+    for e in evs:
+        assert {"name", "ph", "pid", "tid"} <= set(e), e
+        if e["ph"] == "M":
+            assert e["name"] == "thread_name" and e["args"]["name"]
+            lanes_named.add((e["pid"], e["tid"]))
+        elif e["ph"] == "X":
+            assert e["dur"] >= 0 and "ts" in e, e
+        else:
+            assert e["ph"] == "i" and e["s"] == "t" and "ts" in e, e
+    # every event's lane carries a thread_name metadata record
+    for e in evs:
+        assert (e["pid"], e["tid"]) in lanes_named, e
+
+
+# -- metrics + run report ----------------------------------------------------
+def test_histogram_percentiles_and_merge():
+    h = Histogram("t")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.count == 100 and h.mean == pytest.approx(50.5)
+    assert 50.0 <= h.p50 <= 52.0
+    assert 95.0 <= h.p95 <= 97.0
+    assert 99.0 <= h.p99 <= 100.0
+    other = Histogram("t")
+    other.observe(1000.0)
+    h.merge(other)
+    assert h.count == 101 and h.vmax == 1000.0
+
+
+def test_metrics_registry_watch_fires_on_finalize():
+    reg = MetricsRegistry()
+    seen = []
+    reg.watch(seen.append)
+    reg.counter("c").inc(3)
+    rep = reg.finalize(reg.report(meta={"k": "v"}))
+    assert seen == [rep]
+    assert rep.counters == {"c": 3} and rep.meta == {"k": "v"}
+
+
+def test_run_report_merge_across_procs_farm_runs():
+    # fresh skeletons: FarmStats boards are cumulative per-skeleton, and
+    # the merge semantics under test are per-report
+    prog1 = lower(Farm(double, nworkers=2), "procs", metrics=True)
+    assert sorted(prog1(range(60))) == [2 * x for x in range(60)]
+    first = prog1.last_report
+    prog2 = lower(Farm(double, nworkers=2), "procs", metrics=True)
+    assert sorted(prog2(range(40))) == [2 * x for x in range(40)]
+    second = prog2.last_report
+    for rep in (first, second):
+        assert "ff-farm" in rep.farms, rep.farms
+        assert rep.meta["backend"] == "procs"
+        assert rep.queues, "no high-water marks sampled"
+    merged = first.merge(second)
+    assert merged.meta["items_in"] == 40  # meta is last-write
+    fs = merged.farms["ff-farm"]
+    assert fs["tasks_collected"] == 40  # farms too: one stats board re-read
+    for k, v in second.queues.items():
+        assert merged.queues[k] >= v
+
+
+def test_run_report_json_round_trip(tmp_path):
+    prog = lower(SKEL, "threads", metrics=True)
+    prog(XS)
+    rep = prog.last_report
+    p = tmp_path / "report.json"
+    rep.save(str(p))
+    doc = json.loads(p.read_text())
+    assert doc["schema"] == "run-report/1"
+    assert doc["meta"]["items_out"] == len(XS)
+    assert "ff-farm@1" in doc["farms"], doc["farms"]
+
+
+def test_queue_highwater_keys_namespace_by_ir_path():
+    # two stages sharing a default name land at different IR paths, so
+    # their telemetry keys cannot collide
+    prog = lower(Pipeline(Stage(f), Stage(g)), "threads", metrics=True)
+    prog(range(50))
+    keys = set(prog.last_report.queues)
+    assert "ff-stage@0" in keys, keys
+    assert "ff-source@in" in keys, keys
+
+
+def test_report_to_profile():
+    # fresh skeleton: the shared SKEL's stats board is cumulative
+    skel = Pipeline(Stage(f), Farm(double, nworkers=2), Stage(g))
+    prog = lower(skel, "threads", metrics=True)
+    prog(XS)
+    prof = prog.last_report.to_profile()
+    farm_rows = [s for s in prof.stages if s.kind == "farm"]
+    assert farm_rows and farm_rows[0].items == len(XS)
+
+
+def test_tracer_sampling_and_capacity_bounds():
+    vt = Tracer(sample=4, capacity=8).vertex("v")
+    for _ in range(64):
+        t0 = vt.begin()
+        vt.end(t0, "svc")
+    # 1-in-4 sampling over 64 spans = 16 sampled, capacity 8 keeps 8
+    assert len(vt.events) == 8
+    assert vt.dropped == 8
