@@ -136,6 +136,64 @@ def _vertex_cycle_us(tracer, n, traced=True) -> float:
     return dt / n * 1e6
 
 
+class _Tap:
+    """A minimal monitor target: wraps the benchmark's two live rings
+    behind the same ``sample_depths``/``results`` surface a ``Graph``
+    offers, so the Monitor thread reads the SAME head/tail cache lines
+    the hot loop is bouncing — the realistic interference shape."""
+
+    def __init__(self, rings):
+        self.rings = rings
+        self.results: list = []
+
+    def sample_depths(self, into):
+        for i, r in enumerate(self.rings):
+            try:
+                into[f"bench-vertex-{i}"] = len(r)
+            except TypeError:
+                pass
+        return into
+
+
+def _monitor_cycle_us(qin, qout, svc, n) -> float:
+    """The plain (untraced) vertex cycle on caller-supplied rings, so the
+    monitored and unmonitored arms run the identical code path."""
+    t0 = time.perf_counter()
+    for i in range(n):
+        qin.push(i)
+        item = qin.pop()
+        out = svc(item)
+        qout.push(out)
+        qout.pop()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _monitor_overhead(n, pairs=75):
+    """Paired-ratio estimate of the live Monitor's cost to the stream it
+    watches: each round times the plain vertex cycle without and with an
+    attached sampler thread (0.5 ms cadence, reading the cycle's own
+    rings), estimator is the median round — same discipline as
+    :func:`_trace_overhead`.  Returns ``(off_us, on_us, on_ratio)``."""
+    import statistics
+    from repro.core.monitor import Monitor
+    from repro.core.skeleton import FnNode
+    qin, qout = SPSCQueue(1024), SPSCQueue(1024)
+    svc = FnNode(lambda x: x + 1).svc
+    tap = _Tap([qin, qout])
+    mon = Monitor(interval_s=0.0005, capacity=512)
+    offs, ons, ratios = [], [], []
+    for _ in range(pairs):
+        off = _monitor_cycle_us(qin, qout, svc, n)
+        mon.attach(tap)
+        on = _monitor_cycle_us(qin, qout, svc, n)
+        mon.detach()
+        offs.append(off)
+        ons.append(on)
+        ratios.append(on / off)
+    return (statistics.median(offs), statistics.median(ons),
+            statistics.median(ratios))
+
+
 def _trace_overhead(n, pairs=75):
     """Paired-ratio estimate of the trace bracket's cost: each round
     measures plain / off / sampled back to back (shared drift cancels
@@ -350,6 +408,13 @@ def run(emit):
     assert off_ratio <= 1.05, (
         f"tracing-off hot path costs {(off_ratio - 1) * 100:.1f}% on a "
         f"vertex cycle (budget: 5%) — repro.core.obs regressed")
+    mon_off_us, mon_on_us, mon_ratio = _monitor_overhead(N_TRACE)
+    emit("queue_monitor_off", mon_off_us, "")
+    emit("queue_monitor_on", mon_on_us,
+         f"on_over_off={mon_ratio:.3f}x")
+    assert mon_ratio <= 1.05, (
+        f"live Monitor sampling costs {(mon_ratio - 1) * 100:.1f}% on a "
+        f"vertex cycle (budget: 5%) — repro.core.monitor regressed")
     shm_us = _xproc_us_per_item("shm")
     mpq_us = _xproc_us_per_item("mpq")
     emit("queue_xproc_shm", shm_us,

@@ -197,6 +197,32 @@ def main():
     # live telemetry back into a Profile for retune()/Profile.diff.
     assert any(s.kind == "farm" for s in rep.to_profile().stages)
 
+    # -- 1i. live monitoring: watch a run, name the bottleneck ---------------
+    # monitor= attaches a background sampler (a Monitor) to the running
+    # graph: every ~2ms it snapshots live queue depths, farm service
+    # EWMAs and progress counters into a bounded Timeline — no ring
+    # traffic, just racy-benign reads of single-writer state.  Feed the
+    # timeline to analyze() and it scores each stage by queueing
+    # pressure minus outbound drain, names the dominant bottleneck and
+    # recommends which autotune knob (§1g) to turn.  Here the farm is
+    # deliberately starved of workers, so its inbound ring backs up.
+    import time as _time
+    from repro.core import Monitor, analyze
+    mon = Monitor(interval_s=0.001)
+    skewed = Pipeline(_inc, Farm(lambda x: (_time.sleep(0.001), x)[1],
+                                 nworkers=2))
+    lower(skewed, "threads", monitor=mon)(range(256))
+    report = analyze(mon.timeline)
+    print(f"monitor: {len(mon.timeline.frames())} frames -> "
+          f"bottleneck={report.stage} [{report.verdict}]")
+    assert report.stage == "ff-farm@1", report.stage
+    knobs = [r["knob"] for r in report.recommendations]
+    print(f"monitor: recommended knobs={knobs}")   # e.g. nworkers first
+    # mon.timeline.save(path) persists it; `python -m repro.core.monitor
+    # <path>` renders the same analysis top-style in a terminal, and
+    # to_chrome_json(path, timeline=mon.timeline) overlays the depth
+    # curves as Perfetto counter tracks on §1h's swim-lanes.
+
     # -- 2. the paper's app: SW database search (host-only payloads) ---------
     rng = np.random.default_rng(0)
     query = jnp.asarray(rng.integers(0, 20, 32), jnp.int32)

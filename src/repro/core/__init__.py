@@ -35,6 +35,8 @@ from .oocore import (CombiningReader, MemoryBudget, ShardReader, SpillFold,
                      rekey_reduce, shard_reduce, shard_source)
 from .autotune import (Profile, StageProfile, TunedProgram, auto_batch,
                        plan_mesh, profile, retune, ring_capacity)
+from .monitor import (BottleneckReport, DriftWatcher, Monitor, SLOMonitor,
+                      Timeline, analyze)
 from .farm import TaskFarm
 from .allocator import PagePool, PoolExhausted
 from .mdf import MDFExecutor, MDFTask
@@ -74,6 +76,8 @@ __all__ = [
     "MDFExecutor", "MDFTask",
     "Tracer", "VertexTracer", "Trace", "MetricsRegistry", "Histogram",
     "RunReport", "walk_stats",
+    "Monitor", "Timeline", "DriftWatcher", "SLOMonitor",
+    "BottleneckReport", "analyze",
 ] + sorted(_LAZY)
 
 

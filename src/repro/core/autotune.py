@@ -282,6 +282,10 @@ def _profiled_run(skel: Skeleton, xs: List[Any], *,
     instr = _instrument(skel, accs)
     g = lower(instr, "threads", fuse=False).to_graph(list(xs))
     hw: Dict[str, int] = {}
+    # the drain sampler runs once inside wait(), after the vertex threads
+    # join but before teardown — a pilot short enough to finish before the
+    # first poll below still lands every edge key exactly once
+    g.drain_samplers.append(lambda: g.sample_high_water(hw))
     g.run()
     while any(t.is_alive() for t in g._threads):
         g.sample_high_water(hw)

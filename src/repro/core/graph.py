@@ -807,6 +807,16 @@ class Graph:
         # observability: when set (obs.Tracer), run() hands each vertex its
         # own single-writer lane before the threads start
         self.tracer = None
+        # drain-time taps: callables run exactly once inside wait(), after
+        # the vertex threads have joined but BEFORE the finalizers tear any
+        # telemetry down — the only point where "the stream is complete"
+        # and "the rings still exist" are both true, so a short run that
+        # finished before the first caller-side poll still lands exactly
+        # one sample per edge (and never races the caller's results drain)
+        self.drain_samplers: List[Callable[[], None]] = []
+        # set by a monitored lowering: farm workers opt into service-EWMA
+        # timing so the live sampler has a signal to read (see monitor.py)
+        self.live_telemetry = False
 
     def channel(self, capacity: Optional[int] = None,
                 queue_class: Optional[Type] = None) -> Any:
@@ -843,6 +853,8 @@ class Graph:
     def wait(self, timeout: Optional[float] = None) -> List[Any]:
         for t in self._threads:
             t.join(timeout)
+        while self.drain_samplers:
+            self.drain_samplers.pop()()  # run once, even if wait() re-enters
         while self.finalizers:
             self.finalizers.pop()()  # run once, even if wait() is re-entered
         if self.failed:
@@ -872,6 +884,21 @@ class Graph:
             key = _qualname(v.name, v.path)
             if depth > into.get(key, -1):
                 into[key] = depth
+        return into
+
+    def sample_depths(self, into: Dict[str, int]) -> Dict[str, int]:
+        """Live-monitor tap: the *instantaneous* outbound queue depth per
+        vertex (overwrite semantics — each call is one timeline frame,
+        unlike :meth:`sample_high_water`'s running max).  Same lock-free
+        racy-but-benign ``len()`` reads, same ``name@path`` keys."""
+        for v in self.vertices:
+            depth = 0
+            for ring in v.outs:
+                try:
+                    depth = max(depth, len(ring))
+                except TypeError:
+                    pass
+            into[_qualname(v.name, v.path)] = depth
         return into
 
 
@@ -962,7 +989,10 @@ def build(skel: Skeleton, g: Graph, in_ring: Optional[Any],
             w = g.add(WorkerVertex(node, i, ts.stats,
                                    survivable=skel.speculative,
                                    idle_ring=idle,
-                                   record_service=disp.sched.needs_service_stats,
+                                   record_service=(
+                                       disp.sched.needs_service_stats
+                                       # a live monitor consumes the EWMAs
+                                       or getattr(g, "live_telemetry", False)),
                                    name=f"ff-worker-{i}"))
             w.path = path
             g.connect(disp, w, capacity=cap, queue_class=qc)

@@ -58,7 +58,8 @@ __all__ = [
 #: event-kind vocabulary (the typed part of "typed events"); spans and
 #: instants share one namespace so a lane reads as one story
 SPAN_KINDS = ("svc", "stall", "compile", "call", "life")
-INSTANT_KINDS = ("steal", "spill", "eos", "loop", "devices")
+INSTANT_KINDS = ("steal", "spill", "eos", "loop", "devices",
+                 "alert", "drift")
 
 _monotonic = time.monotonic
 
@@ -226,7 +227,8 @@ class Trace:
                     out.append(e)
         return out
 
-    def to_chrome_json(self, path: Optional[str] = None) -> dict:
+    def to_chrome_json(self, path: Optional[str] = None, *,
+                       timeline: Any = None) -> dict:
         """Export in Chrome trace-event format (the JSON-object form:
         ``{"traceEvents": [...]}``), one named lane per vertex —
         ``pid`` is the recording process, ``tid`` a per-lane id with a
@@ -234,8 +236,12 @@ class Trace:
         Perfetto / ``chrome://tracing`` renders the run as labelled
         swim-lanes.  Spans are ``"X"`` complete events, instants ``"i"``
         (thread scope); timestamps are microseconds on the shared
-        monotonic clock.  Returns the document; also writes it to
-        ``path`` when given."""
+        monotonic clock.  ``timeline=`` (a
+        :class:`~repro.core.monitor.Timeline`) merges the live monitor's
+        frames in as ``"C"`` counter tracks — queue depths and service
+        EWMAs render as value graphs above the span lanes, on the same
+        clock.  Returns the document; also writes it to ``path`` when
+        given."""
         evs: List[dict] = []
         for tid, vt in enumerate(self.lanes, start=1):
             evs.append({"name": "thread_name", "ph": "M", "pid": vt.pid,
@@ -259,6 +265,8 @@ class Trace:
                             "ts": (vt.events[-1][1] if vt.events else 0.0)
                             * 1e6,
                             "args": {"count": vt.dropped}})
+        if timeline is not None:
+            evs.extend(timeline.chrome_events())
         doc = {"traceEvents": evs, "displayTimeUnit": "ms"}
         if path is not None:
             with open(path, "w") as f:
@@ -351,8 +359,49 @@ class Histogram:
             self._buf.extend(other._buf[:room])
 
     def snapshot(self) -> dict:
+        # the reservoir samples ride along so cross-run RunReport.merge
+        # can recompute percentiles over BOTH runs' observations instead
+        # of averaging two percentile scalars (which is meaningless)
         return {"count": self.count, "mean": self.mean, "max": self.vmax,
-                "p50": self.p50, "p95": self.p95, "p99": self.p99}
+                "p50": self.p50, "p95": self.p95, "p99": self.p99,
+                "cap": self.cap, "samples": list(self._buf)}
+
+
+def _percentile_sorted(s: List[float], p: float) -> float:
+    if not s:
+        return 0.0
+    return s[min(len(s) - 1, max(0, int(p / 100.0 * len(s))))]
+
+
+def _merge_hist_snapshots(a: dict, b: dict) -> dict:
+    """Commutative merge of two histogram snapshots.  When both carry
+    reservoir samples, concatenate them (sorted, evenly subsampled back
+    to the window cap when over it) and recompute the percentiles over
+    the union — cross-run p95/p99 then cover both runs' observations.
+    Sorting before the deterministic even-spaced subsample makes the
+    result order-independent, so ``a.merge(b) == b.merge(a)`` (pinned by
+    the commutativity test).  Snapshots from before samples shipped fall
+    back to the old count-weighted average."""
+    n1, n2 = a.get("count", 0), b.get("count", 0)
+    n = n1 + n2
+    merged = {"count": n, "max": max(a.get("max", 0.0), b.get("max", 0.0))}
+    s1, s2 = a.get("samples"), b.get("samples")
+    if s1 is not None and s2 is not None:
+        cap = int(a.get("cap") or b.get("cap") or 2048)
+        samples = sorted(list(s1) + list(s2))
+        if len(samples) > cap:
+            samples = [samples[i * len(samples) // cap] for i in range(cap)]
+        merged["cap"] = cap
+        merged["samples"] = samples
+        merged["mean"] = (a.get("mean", 0.0) * n1 +
+                          b.get("mean", 0.0) * n2) / n if n else 0.0
+        for p, key in ((50, "p50"), (95, "p95"), (99, "p99")):
+            merged[key] = _percentile_sorted(samples, p)
+    else:
+        for key in ("mean", "p50", "p95", "p99"):
+            x, y = a.get(key, 0.0), b.get(key, 0.0)
+            merged[key] = (x * n1 + y * n2) / n if n else 0.0
+    return merged
 
 
 class MetricsRegistry:
@@ -475,14 +524,7 @@ class RunReport:
             if mine is None:
                 self.hists[k] = dict(h)
             else:
-                n1, n2 = mine.get("count", 0), h.get("count", 0)
-                n = n1 + n2
-                merged = {"count": n, "max": max(mine.get("max", 0.0),
-                                                 h.get("max", 0.0))}
-                for key in ("mean", "p50", "p95", "p99"):
-                    a, b = mine.get(key, 0.0), h.get(key, 0.0)
-                    merged[key] = (a * n1 + b * n2) / n if n else 0.0
-                self.hists[k] = merged
+                self.hists[k] = _merge_hist_snapshots(mine, h)
         self.farms.update(other.farms)
         for k, v in other.queues.items():
             if v > self.queues.get(k, -1):

@@ -81,8 +81,8 @@ from .shm import ShmCounters, ShmFlag, ShmRing
 from .skeleton import (BACKENDS, GO_ON, AllToAll, EmitMany, Farm, FarmStats,
                        Feedback, KeyBatch, LoweringError, Pipeline, Skeleton,
                        Source, Stage, _FarmEmitMany, _coerce_metrics,
-                       _coerce_tracer, _has_grained_stage, as_skeleton,
-                       ff_node, fuse as _fuse_pass, walk_stats)
+                       _coerce_monitor, _coerce_tracer, _has_grained_stage,
+                       as_skeleton, ff_node, fuse as _fuse_pass, walk_stats)
 from .spsc import EOS, SPSCQueue
 
 __all__ = [
@@ -601,11 +601,13 @@ class ProcDispatchVertex(ProcVertex):
                  loop_board: Optional[ShmCounters] = None,
                  service_rings: Optional[List[ShmRing]] = None,
                  stats_out: Optional[ShmRing] = None,
+                 live_board: Optional[ShmCounters] = None,
                  name: str = "ff-emitter"):
         super().__init__(node, name=name)
         self.sched = sched
         self.loop_ring = loop_ring
         self.loop_board = loop_board
+        self.live_board = live_board  # monitor tap: slot 0 = emitted
         self.service_rings = service_rings or []
         self.stats_out = stats_out  # dispatch -> merge stats hand-off
         self.stats = FarmStats()
@@ -660,6 +662,8 @@ class ProcDispatchVertex(ProcVertex):
             self.loop_board.add(_ENTERED, 1)
         self.sched.place(tok, self._emit_to)
         self.stats.tasks_emitted += 1
+        if self.live_board is not None:
+            self.live_board.add(0, 1)  # single writer: this arbiter only
         # backpressure for token-holding policies (worksteal): stop intake
         # while the policy backlog is over its high-water mark
         hw = self.sched.high_water
@@ -902,11 +906,13 @@ class ProcMergeVertex(ProcVertex):
                  feedback: Optional[Callable[[Any], Tuple[Any, Iterable[Any]]]] = None,
                  stats_in: Optional[ShmRing] = None,
                  stats_out: Optional[ShmRing] = None,
+                 live_board: Optional[ShmCounters] = None,
                  name: str = "ff-collector"):
         super().__init__(node, name=name)
         self.ordered = ordered
         self.loop_ring = loop_ring
         self.loop_board = loop_board
+        self.live_board = live_board  # monitor tap: slot 1 = collected
         self.feedback = feedback
         self.stats_in = stats_in    # dispatch -> merge counter hand-off
         self.stats_out = stats_out  # merge -> caller snapshot
@@ -937,6 +943,8 @@ class ProcMergeVertex(ProcVertex):
                         continue
                     tag, issued, payload = tok
                     st.tasks_collected += 1
+                    if self.live_board is not None:
+                        self.live_board.add(1, 1)  # single writer: merge only
                     st.per_worker[i] = st.per_worker.get(i, 0) + 1
                     if issued:
                         st.latencies.append(time.monotonic() - issued)
@@ -1080,6 +1088,13 @@ class ProcGraph:
         # its sampling config; lanes come home over the control rings at
         # EOS and are absorbed here (caller side) by _on_ctl
         self.tracer = None
+        # live monitoring: when live_telemetry is set before build(), each
+        # farm gets a 2-slot single-writer ShmCounters board (slot 0 =
+        # emitted by the dispatch arbiter, slot 1 = collected by the merge
+        # arbiter) registered here by farm qualname — the Monitor reads
+        # them caller-side with peek(), no ring traffic
+        self.live_telemetry = False
+        self.live_boards: Dict[str, ShmCounters] = {}
 
     # -- construction -------------------------------------------------------
     def channel(self, capacity: Optional[int] = None,
@@ -1117,11 +1132,27 @@ class ProcGraph:
             for ring in v.outs:
                 try:
                     depth = max(depth, len(ring))
-                except (TypeError, OSError):
-                    pass
+                except (TypeError, OSError, ValueError):
+                    pass  # ValueError: memoryview released mid-teardown
             key = _qualname(v.name, v.path)
             if depth > into.get(key, -1):
                 into[key] = depth
+        return into
+
+    def sample_depths(self, into: Dict[str, int]) -> Dict[str, int]:
+        """Live-monitor tap, mirroring :meth:`graph.Graph.sample_depths`:
+        the *instantaneous* outbound depth per vertex (overwrite
+        semantics — one call = one timeline frame).  Safe against the
+        monitor thread racing ``_cleanup()``: a ring whose segment is
+        already unlinked reads as depth 0, never raises."""
+        for v in self.vertices:
+            depth = 0
+            for ring in v.outs:
+                try:
+                    depth = max(depth, len(ring))
+                except (TypeError, OSError, ValueError):
+                    pass
+            into[_qualname(v.name, v.path)] = depth
         return into
 
     def add(self, v: ProcVertex) -> ProcVertex:
@@ -1462,12 +1493,16 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
         d2m = g.channel(4)          # dispatch -> merge stats hand-off
         stats_ring = g.channel(4)   # merge -> caller FarmStats snapshot
         g.register_farm_stats(skel, stats_ring)
+        live = None
+        if getattr(g, "live_telemetry", False):
+            live = g.counters(2)    # monitor tap: emitted / collected
+            g.live_boards[_qualname("ff-farm", path)] = live
 
         sched = make_scheduler(skel.scheduling)
         service_rings: List[ShmRing] = []
         disp = g.add(ProcDispatchVertex(
             sched, skel.emitter, loop_ring=loop_ring, loop_board=board,
-            service_rings=service_rings, stats_out=d2m))
+            service_rings=service_rings, stats_out=d2m, live_board=live))
         disp.path = path
         if in_ring is not None:
             disp.ins.extend(ring_list(in_ring))
@@ -1478,11 +1513,15 @@ def build(skel: Skeleton, g: ProcGraph, in_ring: Optional[Any],
         merge = g.add(ProcMergeVertex(
             skel.collector, ordered=skel.ordered, loop_ring=loop_ring,
             loop_board=board, feedback=skel.feedback,
-            stats_in=d2m, stats_out=stats_ring))
+            stats_in=d2m, stats_out=stats_ring, live_board=live))
         merge.path = path
         for i, node in enumerate(skel.worker_nodes):
             idle = sched.worker_channel(i, g.channel)
-            service = g.channel(64) if sched.needs_service_stats else None
+            # a live monitor consumes the EWMAs too: arm the service
+            # rings so the detach-time frame carries real service times
+            service = (g.channel(64)
+                       if sched.needs_service_stats
+                       or getattr(g, "live_telemetry", False) else None)
             if service is not None:
                 service_rings.append(service)
             w = g.add(ProcWorkerVertex(node, i, idle_ring=idle,
@@ -1539,7 +1578,8 @@ class ProcProgram:
                  fuse: Any = "auto", fuse_threshold_us: Optional[float] = None,
                  zero_copy: bool = True, batch: Any = None,
                  pool: Optional[bool] = None,
-                 trace: Any = False, metrics: Any = False):
+                 trace: Any = False, metrics: Any = False,
+                 monitor: Any = None):
         if fuse and isinstance(skeleton, Pipeline):
             force = fuse is True
             thr = fuse_threshold_us
@@ -1556,6 +1596,7 @@ class ProcProgram:
         self.pool = pool
         self.tracer = _coerce_tracer(trace)
         self.metrics = _coerce_metrics(metrics)
+        self.monitor = _coerce_monitor(monitor)
         self.last_trace = None
         self.last_report = None
 
@@ -1563,6 +1604,9 @@ class ProcProgram:
         g = ProcGraph(capacity=self.capacity, slot_size=self.slot_size,
                       zero_copy=self.zero_copy, batch=self.batch,
                       pool=self.pool)
+        # per-farm live counter boards exist only when a monitor will read
+        # them — a monitorless lowering allocates nothing extra
+        g.live_telemetry = self.monitor is not None
         try:
             # Build the driving Source separately (at path "in") so the
             # user skeleton keeps its root IR paths — telemetry keys
@@ -1585,25 +1629,32 @@ class ProcProgram:
             return []  # nothing to stream; skip the spawn entirely
         g = self.to_graph(xs)
         reg = self.metrics
-        if reg is None:
-            out = g.run_and_wait(self.timeout)
-        else:
-            hw: Dict[str, int] = {}
-            t0 = time.monotonic()
-            g.run()
+        mon = self.monitor
+        if mon is not None:
+            mon.attach(g, skeleton=self.skeleton, backend="procs")
+        try:
+            if reg is None:
+                out = g.run_and_wait(self.timeout)
+            else:
+                hw: Dict[str, int] = {}
+                t0 = time.monotonic()
+                g.run()
 
-            def drain() -> bool:  # the wait loop doubles as the hw tap
-                g.sample_high_water(hw)
-                return g.poll_results()
+                def drain() -> bool:  # the wait loop doubles as the hw tap
+                    g.sample_high_water(hw)
+                    return g.poll_results()
 
-            out = g._wait_until(drain, self.timeout)
-            farms = {q: farm_stats_snapshot(st)
-                     for q, st in walk_stats(self.skeleton)}
-            self.last_report = reg.finalize(reg.report(
-                farms=farms, queues=hw, pool=pool_stats(),
-                meta={"backend": "procs", "vertices": len(g.vertices),
-                      "items_in": len(xs), "items_out": len(out),
-                      "wall_s": time.monotonic() - t0}))
+                out = g._wait_until(drain, self.timeout)
+                farms = {q: farm_stats_snapshot(st)
+                         for q, st in walk_stats(self.skeleton)}
+                self.last_report = reg.finalize(reg.report(
+                    farms=farms, queues=hw, pool=pool_stats(),
+                    meta={"backend": "procs", "vertices": len(g.vertices),
+                          "items_in": len(xs), "items_out": len(out),
+                          "wall_s": time.monotonic() - t0}))
+        finally:
+            if mon is not None:
+                mon.detach()
         if self.tracer is not None:
             self.last_trace = self.tracer.trace()
         return out

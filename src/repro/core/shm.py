@@ -532,6 +532,18 @@ class ShmCounters:
         off = i * (_CACHE_LINE // 8)
         self._idx[off] = self._idx[off] + delta
 
+    def peek(self) -> Optional[tuple]:
+        """Teardown-safe :meth:`snapshot` for outside observers (the live
+        monitor samples these boards from its own thread, which may race
+        the graph's cleanup): returns ``None`` instead of raising once
+        the board is closed or its memoryview released mid-read."""
+        if self._closed:
+            return None
+        try:
+            return self.snapshot()
+        except (ValueError, OSError):  # released buf / vanished segment
+            return None
+
     def close(self) -> None:
         if self._closed:
             return

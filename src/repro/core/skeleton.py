@@ -1050,6 +1050,20 @@ def _coerce_metrics(metrics: Any) -> Optional[MetricsRegistry]:
     return MetricsRegistry() if metrics else None
 
 
+def _coerce_monitor(monitor: Any):
+    """``monitor=`` on lower(): None/False -> off, True -> a fresh
+    default :class:`~repro.core.monitor.Monitor`, an instance -> shared.
+    The import is lazy so ``monitor=None`` programs never touch
+    monitor.py at all (pinned by the tracemalloc test, same discipline
+    as the obs pin)."""
+    if not monitor:
+        return None
+    from .monitor import Monitor
+    if isinstance(monitor, Monitor):
+        return monitor
+    return Monitor()
+
+
 class ThreadProgram:
     """Threads lowering: the skeleton wired onto the PR-1 graph runtime
     (one thread per vertex, lock-free SPSC rings for every edge).
@@ -1067,14 +1081,20 @@ class ThreadProgram:
     call.  ``metrics=True`` (or a
     :class:`~repro.core.obs.MetricsRegistry`) samples queue depths while
     the run drains and absorbs the skeleton's ``FarmStats`` into a
-    :class:`~repro.core.obs.RunReport` on ``last_report``."""
+    :class:`~repro.core.obs.RunReport` on ``last_report``.
+
+    ``monitor=True`` (or a :class:`~repro.core.monitor.Monitor`) attaches
+    the continuous live sampler for the duration of each call: queue
+    depths, farm EWMAs and counters land in ``monitor.timeline`` while
+    the stream runs — see :mod:`repro.core.monitor`."""
 
     backend = "threads"
 
     def __init__(self, skeleton: Skeleton, *,
                  queue_class: Optional[Type] = None, capacity: int = 512,
                  fuse: Any = "auto", fuse_threshold_us: Optional[float] = None,
-                 trace: Any = False, metrics: Any = False):
+                 trace: Any = False, metrics: Any = False,
+                 monitor: Any = None):
         if fuse and isinstance(skeleton, Pipeline):
             force = fuse is True
             thr = fuse_threshold_us
@@ -1087,6 +1107,7 @@ class ThreadProgram:
         self.capacity = capacity
         self.tracer = _coerce_tracer(trace)
         self.metrics = _coerce_metrics(metrics)
+        self.monitor = _coerce_monitor(monitor)
         self.last_trace = None
         self.last_report = None
 
@@ -1095,6 +1116,10 @@ class ThreadProgram:
         from .spsc import SPSCQueue
         g = graph.Graph(queue_class=self.queue_class or SPSCQueue,
                         capacity=self.capacity)
+        # a live monitor wants per-worker service EWMAs: opt the farm
+        # workers into the timing they otherwise skip (same flag the
+        # procs backend uses to arm its live counter boards)
+        g.live_telemetry = self.monitor is not None
         # Build the driving Source separately (at path "in") so the user
         # skeleton keeps its root IR paths — telemetry keys vertices by
         # path, and wrapping in a fresh Pipeline would shift every
@@ -1111,24 +1136,35 @@ class ThreadProgram:
         xs = list(items)
         g = self.to_graph(xs)
         reg = self.metrics
-        if reg is None:
-            out = g.run_and_wait()
-        else:
-            hw: Dict[str, int] = {}
-            t0 = time.monotonic()
-            g.run()
-            while any(t.is_alive() for t in g._threads):
-                g.sample_high_water(hw)
-                time.sleep(0.0005)
-            g.sample_high_water(hw)  # a short run can finish before the
-            out = g.wait()           # first poll: every key still lands
-            farms = {q: farm_stats_snapshot(st)
-                     for q, st in walk_stats(self.skeleton)}
-            self.last_report = reg.finalize(reg.report(
-                farms=farms, queues=hw,
-                meta={"backend": "threads", "vertices": len(g.vertices),
-                      "items_in": len(xs), "items_out": len(out),
-                      "wall_s": time.monotonic() - t0}))
+        mon = self.monitor
+        if mon is not None:
+            mon.attach(g, skeleton=self.skeleton, backend="threads")
+        try:
+            if reg is None:
+                out = g.run_and_wait()
+            else:
+                hw: Dict[str, int] = {}
+                t0 = time.monotonic()
+                # a short run can finish before the first poll below: the
+                # drain sampler runs inside wait() after the vertex threads
+                # join but before teardown, so every edge key still lands
+                # exactly once — and never races the caller's results drain
+                g.drain_samplers.append(lambda: g.sample_high_water(hw))
+                g.run()
+                while any(t.is_alive() for t in g._threads):
+                    g.sample_high_water(hw)
+                    time.sleep(0.0005)
+                out = g.wait()
+                farms = {q: farm_stats_snapshot(st)
+                         for q, st in walk_stats(self.skeleton)}
+                self.last_report = reg.finalize(reg.report(
+                    farms=farms, queues=hw,
+                    meta={"backend": "threads", "vertices": len(g.vertices),
+                          "items_in": len(xs), "items_out": len(out),
+                          "wall_s": time.monotonic() - t0}))
+        finally:
+            if mon is not None:
+                mon.detach()
         if self.tracer is not None:
             self.last_trace = self.tracer.trace()
         return out
@@ -1222,7 +1258,8 @@ class MeshProgram:
                  grain: Optional[int] = None, capacity: Optional[int] = None,
                  block: int = 64, check_vma: Optional[bool] = None,
                  factorization: Optional[Tuple[int, int]] = None,
-                 trace: Any = False, metrics: Any = False):
+                 trace: Any = False, metrics: Any = False,
+                 monitor: Any = None):
         import jax
         from . import dpipeline
 
@@ -1257,6 +1294,11 @@ class MeshProgram:
         # instant, one compile span per cache miss, one call span per run
         self.tracer = _coerce_tracer(trace)
         self.metrics = _coerce_metrics(metrics)
+        # live monitoring: no host vertices to sample, so each call pushes
+        # one program-level counter frame (Monitor.program_frame)
+        self.monitor = _coerce_monitor(monitor)
+        self._mon_calls = 0
+        self._mon_items = 0
         self.last_trace = None
         self.last_report = None
         self._lane = None
@@ -1325,6 +1367,15 @@ class MeshProgram:
             self.last_report = reg.finalize(reg.report(
                 meta={"backend": "mesh", "n_stage": self.n_stage,
                       "n_worker": self.n_worker}))
+        if self.monitor is not None:
+            self._mon_calls += 1
+            self._mon_items += n
+            self.monitor.program_frame({
+                "mesh.calls": self._mon_calls,
+                "mesh.items": self._mon_items,
+                "mesh.compiles": len(self._programs),
+                "mesh.devices": self.n_stage * self.n_worker,
+                "mesh.call_us": (t1 - t0) * 1e6})
         out = out[:n, :d]
         if squeeze:
             return [v.item() for v in out[:, 0]]

@@ -58,6 +58,17 @@ def big_payload(x):
     return ("#" * 5000, x)  # forces the shm ring's spill side-channel
 
 
+# -- monitor-test nodes: a synthetic skewed pipeline (one stage 10x slower) --
+def fast_stage(x):
+    time.sleep(0.0002)
+    return x + 1
+
+
+def slow_stage(x):
+    time.sleep(0.002)  # the 10x-slower stage the analyzer must name
+    return x * 2
+
+
 # -- all-to-all / stream_ops nodes (spawned children re-import these) --------
 def mod3(x):
     return x % 3

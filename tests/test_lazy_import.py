@@ -106,3 +106,24 @@ def test_ir_construction_stays_jax_free():
         "'threads')(range(10)))\n"
         "assert out == {0: 18, 1: 12, 2: 15}, out\n"
         "assert 'jax' not in sys.modules, 'thread lowering imported jax'")
+
+
+def test_monitor_stays_jax_free():
+    """The live-monitoring layer is eagerly imported by ``repro.core``
+    and its sampler thread rides inside monitored host runs: importing
+    it, monitoring a threads run, analyzing the timeline and rendering
+    the report must never load jax."""
+    _run_isolated(
+        "import sys\n"
+        "import repro.core.monitor\n"
+        "from repro.core import Farm, Monitor, Pipeline, analyze, lower\n"
+        "def f(x): return x + 1\n"
+        "mon = Monitor(interval_s=0.001)\n"
+        "prog = lower(Pipeline(f, Farm(f, nworkers=2)), 'threads', "
+        "monitor=mon)\n"
+        "out = prog(range(80))\n"
+        "assert sorted(out) == [x + 2 for x in range(80)], out[:5]\n"
+        "assert mon.timeline.frames(), 'monitor sampled nothing'\n"
+        "rep = analyze(mon.timeline)\n"
+        "assert rep.render(), 'empty report render'\n"
+        "assert 'jax' not in sys.modules, 'monitor imported jax'")

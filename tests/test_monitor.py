@@ -1,0 +1,306 @@
+"""Live monitoring (repro.core.monitor): the background sampler, the
+bottleneck analyzer, the drift watcher and the SLO monitor.
+
+The load-bearing pins:
+
+* frame parity — the SAME skewed skeleton monitored on threads and
+  procs yields frames whose depth taps use the SAME backend-neutral
+  qualnames, and whose progress counters are monotone (telemetry keys
+  by IR path, not by runtime object);
+* the analyzer names the 10x-slower stage on BOTH host backends — the
+  acceptance pin for bottleneck attribution;
+* drift alerts latch: a sustained service-time shift past the saved
+  profile's threshold fires exactly ONCE per excursion;
+* monitor off allocates NOTHING in monitor.py — same structural
+  overhead claim as tracing-off (the vertex path never enters the
+  module; ``monitor=None`` is the default).
+"""
+import json
+import os
+import subprocess
+import sys
+import tracemalloc
+
+import pytest
+
+from repro.core import (DriftWatcher, Farm, MetricsRegistry, Monitor,
+                        Pipeline, Profile, SLOMonitor, Stage, StageProfile,
+                        Timeline, analyze, lower)
+from repro.core import monitor as monitor_mod
+from repro.core.obs import Histogram, Tracer
+from tests._procs_nodes import fast_stage, slow_stage
+
+# one stage 10x slower: the analyzer must name position 1
+SKEW = Pipeline(Stage(fast_stage), Stage(slow_stage))
+N_SKEW = 60
+WANT_SKEW = sorted(slow_stage(fast_stage(x)) for x in range(N_SKEW))
+
+
+def _depth_quals(tl):
+    quals = set()
+    for fr in tl.frames():
+        quals |= set(fr["depths"])
+    return quals
+
+
+def _monotone(tl, key):
+    vals = [fr["counters"][key] for fr in tl.frames()
+            if key in fr["counters"]]
+    assert vals, f"counter {key!r} never sampled"
+    assert all(a <= b for a, b in zip(vals, vals[1:])), (key, vals)
+    return vals
+
+
+# -- the acceptance pin: frame parity + bottleneck naming, both backends -----
+def test_monitor_parity_and_bottleneck_threads_procs():
+    timelines = {}
+    for backend in ("threads", "procs"):
+        mon = Monitor(interval_s=0.001)
+        prog = lower(SKEW, backend, monitor=mon)
+        assert sorted(prog(range(N_SKEW))) == WANT_SKEW
+        tl = mon.timeline
+        assert tl.frames(), f"{backend}: monitor sampled nothing"
+        assert mon.errors == 0, f"{backend}: absorbed sampler errors"
+        timelines[backend] = tl
+        # progress counter is monotone and lands on the stream length
+        vals = _monotone(tl, "items_out")
+        assert vals[-1] == N_SKEW, (backend, vals[-1])
+        # the analyzer names the slow stage on this backend
+        rep = analyze(tl)
+        assert rep.stage == "ff-stage@1", (backend, rep.to_json())
+        assert rep.verdict == "queue-bound"
+        assert any(r["knob"] in ("nworkers", "grain")
+                   for r in rep.recommendations), rep.recommendations
+    # same backend-neutral depth tap names on both host backends
+    tq, pq = _depth_quals(timelines["threads"]), _depth_quals(
+        timelines["procs"])
+    assert tq == pq, (sorted(tq), sorted(pq))
+    assert {"ff-source@in", "ff-stage@0", "ff-stage@1"} <= tq, sorted(tq)
+
+
+def test_procs_farm_live_boards_monotone():
+    """Mid-run farm progress on procs comes from the single-writer
+    ShmCounters boards (slot 0 = emitted by the dispatch arbiter,
+    slot 1 = collected by the merge arbiter), read caller-side."""
+    mon = Monitor(interval_s=0.001)
+    skel = Pipeline(Stage(fast_stage), Farm(slow_stage, nworkers=2))
+    prog = lower(skel, "procs", monitor=mon)
+    out = prog(range(40))
+    assert sorted(out) == sorted(slow_stage(fast_stage(x))
+                                 for x in range(40))
+    em = _monotone(mon.timeline, "ff-farm@1.emitted")
+    co = _monotone(mon.timeline, "ff-farm@1.collected")
+    assert em[-1] == 40 and co[-1] == 40, (em[-1], co[-1])
+    # collected never runs ahead of emitted within a frame
+    for fr in mon.timeline.frames():
+        c = fr["counters"]
+        if "ff-farm@1.emitted" in c and "ff-farm@1.collected" in c:
+            assert c["ff-farm@1.collected"] <= c["ff-farm@1.emitted"], c
+
+
+def test_mesh_program_level_frames():
+    pytest.importorskip("jax")
+    from tests._procs_nodes import double
+    mon = Monitor()
+    prog = lower(Farm(double, nworkers=2), "mesh", monitor=mon)
+    prog([float(x) for x in range(16)])
+    prog([float(x) for x in range(16)])
+    frames = mon.timeline.frames()
+    assert len(frames) == 2, len(frames)
+    for fr in frames:
+        assert not fr["depths"] and not fr["ewma_us"]  # program-level only
+        assert {"mesh.calls", "mesh.items", "mesh.compiles",
+                "mesh.devices", "mesh.call_us"} <= set(fr["counters"])
+    assert frames[1]["counters"]["mesh.calls"] == 2
+    assert frames[1]["counters"]["mesh.items"] == 32
+    # second same-shaped call reused the compile cache
+    assert frames[1]["counters"]["mesh.compiles"] == \
+        frames[0]["counters"]["mesh.compiles"]
+
+
+# -- overhead: monitor off touches monitor.py not at all ---------------------
+def test_monitor_off_allocates_nothing():
+    prog = lower(SKEW, "threads")  # no monitor=
+    prog(range(N_SKEW))  # warm the lowering before the snapshot window
+    tracemalloc.start()
+    try:
+        assert sorted(prog(range(N_SKEW))) == WANT_SKEW
+        snap = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    allocs = snap.filter_traces(
+        [tracemalloc.Filter(True, monitor_mod.__file__)])
+    total = sum(s.size for s in allocs.statistics("filename"))
+    assert total == 0, f"monitor-off run allocated {total}B in monitor.py"
+
+
+# -- the timeline ring -------------------------------------------------------
+def test_timeline_ring_and_round_trip(tmp_path):
+    tl = Timeline(capacity=4)
+    for i in range(7):
+        tl.append({"t": float(i), "depths": {"v": i}, "ewma_us": {},
+                   "counters": {"items_out": i}})
+    frames = tl.frames()
+    assert len(frames) == 4
+    assert [f["t"] for f in frames] == [3.0, 4.0, 5.0, 6.0]  # ring order
+    assert tl.dropped == 3
+    path = str(tmp_path / "tl.json")
+    tl.save(path)
+    back = Timeline.load(path)
+    assert back.schema == "timeline/1"
+    assert back.frames() == frames
+    assert back.dropped == 3
+    # analyze() accepts the raw JSON document too
+    with open(path) as f:
+        rep = analyze(json.load(f))
+    assert rep.frames == 4
+
+
+def test_timeline_chrome_counter_tracks():
+    """A monitored + traced run overlays depth/counter tracks ("C"
+    events under an ff-monitor process) on the swim-lane export."""
+    mon = Monitor(interval_s=0.001)
+    prog = lower(SKEW, "threads", trace=True, monitor=mon)
+    prog(range(N_SKEW))
+    doc = prog.last_trace.to_chrome_json(timeline=mon.timeline)
+    cev = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert cev, "no counter tracks in merged export"
+    names = {e["name"] for e in cev}
+    assert any(n.startswith("depth:") for n in names), names
+    assert "items_out" in names, names
+    pids = {e["pid"] for e in cev}
+    procs = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"
+             and e["pid"] in pids}
+    assert "ff-monitor" in procs, procs
+
+
+# -- drift watcher -----------------------------------------------------------
+def _saved_profile(service_us):
+    return Profile(handoff_us=1.0, pilot_items=50, stages=[
+        StageProfile(path="1", kind="farm", name="ff-farm",
+                     service_us=service_us, service_ewma_us=service_us,
+                     items=50)])
+
+
+def test_drift_watcher_fires_and_latches():
+    w = DriftWatcher(_saved_profile(100.0), threshold=0.5)
+    # under threshold: quiet
+    assert w.check({"ff-farm@1": 120.0}) == []
+    # past threshold: fires once...
+    fired = w.check({"ff-farm@1": 200.0})
+    assert len(fired) == 1 and fired[0]["path"] == "1"
+    assert fired[0]["live_us"] == 200.0 and fired[0]["saved_us"] == 100.0
+    # ...then latches, even while the drift persists or grows
+    assert w.check({"ff-farm@1": 210.0}) == []
+    assert w.check({"ff-farm@1": 500.0}) == []
+    # re-arms only under threshold/2, then a new excursion fires again
+    assert w.check({"ff-farm@1": 160.0}) == []   # rel 0.6 > 0.25: still off
+    assert w.check({"ff-farm@1": 110.0}) == []   # rel 0.1 < 0.25: re-armed
+    assert len(w.check({"ff-farm@1": 300.0})) == 1
+    assert len(w.events) == 2
+
+
+def test_drift_watcher_routes_through_registry_watch():
+    seen = []
+    reg = MetricsRegistry()
+    reg.watch(lambda rep: seen.append(rep.meta.get("event")))
+    w = DriftWatcher(_saved_profile(100.0), threshold=0.5, registry=reg)
+    w.check({"ff-farm@1": 300.0})
+    assert seen == ["drift"]
+    assert reg.counter("monitor.drift_alerts").value == 1
+
+
+def test_drift_fires_exactly_once_mid_run_threads():
+    """The acceptance pin: live EWMAs vs a saved pilot profile, with the
+    farm's real service time far past the saved one — the monitor's
+    per-frame checks alert exactly once for the whole excursion."""
+    reg = MetricsRegistry()
+    alerts = []
+    reg.watch(lambda rep: alerts.append(rep.meta))
+    # saved profile says 100us; slow_stage services at ~2000us -> rel ~19
+    mon = Monitor(interval_s=0.001, profile=_saved_profile(100.0),
+                  drift_threshold=3.0, registry=reg)
+    prog = lower(Pipeline(Stage(fast_stage),
+                          Farm(slow_stage, nworkers=2)), "threads",
+                 monitor=mon)
+    prog(range(80))
+    drift_events = [e for e in mon.drift.events if e["path"] == "1"]
+    assert len(drift_events) == 1, drift_events
+    assert [a["event"] for a in alerts] == ["drift"]
+    assert reg.counter("monitor.drift_alerts").value == 1
+    assert drift_events[0]["live_us"] > drift_events[0]["saved_us"]
+
+
+# -- SLO monitor -------------------------------------------------------------
+def test_slo_monitor_latency_latch_and_trace_instants():
+    tracer = Tracer()
+    reg = MetricsRegistry()
+    slo = SLOMonitor(p99_us=10_000.0, registry=reg)
+    slo.bind(tracer)
+    hist = Histogram("serve.request_latency_us")
+    for _ in range(50):
+        hist.observe(50_000.0)
+    assert len(slo.check(hist)) == 1      # breach fires...
+    assert slo.check(hist) == []          # ...and latches
+    assert reg.counter("slo.alerts").value == 1
+    fresh = Histogram("serve.request_latency_us")
+    for _ in range(50):
+        fresh.observe(1_000.0)
+    assert slo.check(fresh) == []         # recovery re-arms
+    assert len(slo.check(hist)) == 1      # next excursion fires again
+    tr = tracer.trace()
+    kinds = [e[0] for e in tr.events()]
+    assert kinds.count("alert") == 2, kinds
+    assert "slo-monitor" in tr.qualnames()
+
+
+def test_slo_monitor_goodput():
+    slo = SLOMonitor(min_goodput=100.0)
+    assert len(slo.check(goodput=40.0)) == 1
+    assert slo.check(goodput=35.0) == []          # latched
+    assert slo.check(goodput=150.0) == []         # re-armed
+    assert len(slo.check(goodput=10.0)) == 1
+
+
+# -- the CLI renderer --------------------------------------------------------
+def _run_cli(*argv):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.core.monitor", *argv],
+        env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_renders_timeline_and_report(tmp_path):
+    mon = Monitor(interval_s=0.001)
+    prog = lower(SKEW, "threads", metrics=True, monitor=mon)
+    prog(range(N_SKEW))
+    tl_path = str(tmp_path / "timeline.json")
+    mon.timeline.save(tl_path)
+    out = _run_cli(tl_path)
+    assert out.returncode == 0, out.stderr
+    assert "ff-monitor:" in out.stdout and "bottleneck:" in out.stdout
+    assert "ff-stage@1" in out.stdout
+    # a run-report document renders through the same entry point
+    rep_path = str(tmp_path / "report.json")
+    prog.last_report.save(rep_path)
+    out = _run_cli(rep_path)
+    assert out.returncode == 0, out.stderr
+    assert "run-report" in out.stdout
+    # unknown schema: exit 2, not a traceback
+    bad = str(tmp_path / "bad.json")
+    with open(bad, "w") as f:
+        json.dump({"schema": "nope/9"}, f)
+    out = _run_cli(bad)
+    assert out.returncode == 2, (out.returncode, out.stderr)
+
+
+# -- analyzer over a trace (post-mortem attribution) -------------------------
+def test_analyze_trace_names_busy_stage():
+    prog = lower(SKEW, "threads", trace=True)
+    prog(range(N_SKEW))
+    rep = analyze(prog.last_trace)
+    assert rep.verdict == "compute-bound"
+    assert rep.stage == "ff-stage@1", rep.to_json()

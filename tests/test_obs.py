@@ -206,3 +206,61 @@ def test_tracer_sampling_and_capacity_bounds():
     # 1-in-4 sampling over 64 spans = 16 sampled, capacity 8 keeps 8
     assert len(vt.events) == 8
     assert vt.dropped == 8
+
+
+# -- hist merge: reservoir samples concatenate, not last-write ---------------
+def _hist_report(vals, cap=8):
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", cap=cap)
+    for v in vals:
+        h.observe(float(v))
+    return reg.report()
+
+
+def test_run_report_hist_merge_is_commutative():
+    """merge() on a reservoir histogram used to be last-writer-wins: the
+    second report's percentiles replaced the first's.  The samples must
+    concatenate (capped at the window size) so both sides survive, and
+    a.merge(b) must equal b.merge(a)."""
+    lows, highs = [1.0] * 50, [1000.0] * 50
+    ab = _hist_report(lows).merge(_hist_report(highs)).hists["lat"]
+    ba = _hist_report(highs).merge(_hist_report(lows)).hists["lat"]
+    assert ab == ba, (ab, ba)
+    assert ab["count"] == 100
+    assert ab["mean"] == pytest.approx(500.5)
+    # both populations survived into the merged reservoir
+    assert min(ab["samples"]) == 1.0 and max(ab["samples"]) == 1000.0
+    assert len(ab["samples"]) <= ab["cap"]  # capped at the window size
+    assert ab["p99"] == 1000.0
+
+
+def test_run_report_hist_merge_three_way_keeps_all_populations():
+    """Chained merges subsample (the reservoir is bounded), so exact
+    associativity is out of reach — but the lifetime count/mean stay
+    exact in any order, and every population must survive into the
+    final reservoir regardless of merge order."""
+    parts = ([5.0] * 20, [50.0] * 20, [500.0] * 20)
+    fwd = _hist_report(parts[0]).merge(
+        _hist_report(parts[1])).merge(_hist_report(parts[2]))
+    rev = _hist_report(parts[2]).merge(
+        _hist_report(parts[1])).merge(_hist_report(parts[0]))
+    for h in (fwd.hists["lat"], rev.hists["lat"]):
+        assert h["count"] == 60
+        assert h["mean"] == pytest.approx(185.0)
+        assert h["max"] == 500.0
+        assert {5.0, 50.0, 500.0} <= set(h["samples"]), h["samples"]
+        assert len(h["samples"]) <= h["cap"]
+
+
+# -- short runs: the drain-time tap lands exactly one sample per edge --------
+def test_short_run_samples_every_edge():
+    """A one-item stream finishes before the caller-side poll loop's
+    first tick; the drain sampler inside wait() must still land one
+    high-water sample per edge — no key may be missing, and the sink
+    edge must not race the results drain."""
+    skel = Pipeline(Stage(f), Farm(double, nworkers=2), Stage(g))
+    prog = lower(skel, "threads", metrics=True)
+    assert prog(range(1)) == [g(double(f(0)))]
+    keys = set(prog.last_report.queues)
+    assert {"ff-source@in", "ff-stage@0", "ff-emitter@1", "ff-worker-0@1",
+            "ff-worker-1@1", "ff-collector@1"} <= keys, keys

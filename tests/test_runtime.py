@@ -202,3 +202,23 @@ def test_serve_engine_recycles_slots():
     results = eng.run()
     assert len(results) == 6
     assert eng.pool.allocated == 6
+
+
+def test_serve_engine_slo_monitor_alerts():
+    """An impossible p99 budget must fire exactly one latched latency
+    alert for the run, stamp it on the engine's trace as an ``alert``
+    instant, and land the slo.alerts counter in last_report."""
+    from repro.core import SLOMonitor
+    cfg = ARCHS["phi3-mini-3.8b"].smoke()
+    slo = SLOMonitor(p99_us=0.001)           # any real request breaches
+    eng = ServeEngine(cfg, max_batch=2, max_len=128, seed=0, slo=slo)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1, 2, 3], max_new=4))
+    results = eng.run()
+    assert len(results) == 3
+    assert [e["signal"] for e in slo.events] == ["p99_latency_us"]
+    assert eng.last_report.counters["slo.alerts"] == 1
+    assert eng.last_trace is not None
+    lane = next(vt for vt in eng.last_trace.lanes
+                if vt.qualname == "slo-monitor")
+    assert any(e[0] == "alert" for e in lane.events)
